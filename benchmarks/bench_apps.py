@@ -1,0 +1,77 @@
+"""Fig. 5 (Dijkstra) and Fig. 6 (in-situ pruning) application benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cost
+from repro.graph import dijkstra as dj
+from repro.pruning import insitu
+
+# Fig. 6f / Table S3: representative layer sizes from the paper's
+# PointNet++ pruning table (param counts of the layers they pruned).
+TABLE_S3_LAYERS = [288, 1024, 2048, 576, 32, 64, 128, 16384, 6400]
+
+
+def run(report):
+    # ---- Fig. 5e/5f: shortest path -------------------------------------
+    t0 = time.perf_counter()
+    res = dj.shortest_path(0, 13, k=2, engine="oracle")
+    wall = (time.perf_counter() - t0) * 1e6
+    point = cost.operating_point("tns", n=16, w=16, k=2)
+    m = cost.sort_metrics(res.total_cycles, res.numbers_sorted, point)
+    t0 = time.perf_counter()
+    for _ in range(200):
+        dj.reference_shortest_path(0, 13)
+    cpu_us = (time.perf_counter() - t0) / 200 * 1e6
+    cpu_thpt = res.numbers_sorted / cpu_us
+    report("fig5_dijkstra", wall, {
+        "path_ok": res.path == dj.reference_shortest_path(0, 13)[1],
+        "fig5e_drs_per_number": round(res.fig5e_drs_per_number, 2),
+        "sim_num_per_us": round(m.throughput_num_per_us, 1),
+        "sim_num_per_nJ": round(m.energy_eff, 1),
+        "cpu_num_per_us": round(cpu_thpt, 3),
+        "speedup_vs_cpu": round(m.throughput_num_per_us / cpu_thpt, 1),
+    })
+
+    # ---- Fig. 6f: pruning throughput across layer sizes -----------------
+    rng = np.random.default_rng(0)
+    total_cycles = total_located = 0
+    per_layer = []
+    for size in TABLE_S3_LAYERS:
+        w = rng.standard_normal(size)
+        t0 = time.perf_counter()
+        idx, cycles, drs = insitu.tns_prune(w, rate=0.3, k=2)
+        wall = (time.perf_counter() - t0) * 1e6
+        point = cost.operating_point("tns", n=size, w=8, k=2)
+        mm = cost.sort_metrics(cycles, len(idx), point)
+        per_layer.append(mm.throughput_num_per_us)
+        total_cycles += cycles
+        total_located += len(idx)
+        report(f"fig6_prune_layer{size}", wall, {
+            "located": len(idx), "cycles": cycles,
+            "num_per_us": round(mm.throughput_num_per_us, 1)})
+    # CPU baseline: argsort-based selection on this host
+    t0 = time.perf_counter()
+    for size in TABLE_S3_LAYERS:
+        w = rng.standard_normal(size)
+        np.argsort(np.abs(w))[: int(0.3 * size)]
+    cpu_us = (time.perf_counter() - t0) * 1e6
+    cpu_thpt = total_located / cpu_us
+    sim_thpt = float(np.mean(per_layer))
+    report("fig6_prune_summary", 0.0, {
+        "sim_num_per_us_mean": round(sim_thpt, 1),
+        "cpu_num_per_us": round(cpu_thpt, 2),
+        "speedup_vs_cpu": round(sim_thpt / cpu_thpt, 1),
+    })
+
+    # ---- Fig. S28-style: prune-selection robustness under BER ----------
+    w = rng.standard_normal(128)
+    idx0, _, _ = insitu.tns_prune(w, 0.3)
+    overlaps = {}
+    for ber in (0.01, 0.05, 0.1, 0.2):
+        idx, _, _ = insitu.tns_prune(w, 0.3, ber=ber, seed=5)
+        overlaps[f"ber_{ber}"] = round(
+            len(set(idx0) & set(idx)) / len(idx0), 3)
+    report("figS28_ber_overlap", 0.0, overlaps)

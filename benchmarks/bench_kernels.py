@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: radix-select engines vs lax references (CPU
+wall time is advisory; TPU perf is what the roofline section models) and
+Pallas interpret-mode validation timings."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import radix_select as rs
+
+
+def _timeit(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+
+    # router-shaped top-k: (tokens, experts)
+    x = jnp.asarray(rng.standard_normal((512, 160)), jnp.float32)
+    f_radix = jax.jit(lambda v: rs.topk_values(v, 6))
+    f_lax = jax.jit(lambda v: jax.lax.top_k(v, 6))
+    us_r = _timeit(f_radix, x)
+    us_l = _timeit(f_lax, x)
+    vr, ir = f_radix(x)
+    vl, il = f_lax(x)
+    report("kernel_router_topk_radix", us_r,
+           {"match_lax": bool(jnp.allclose(vr, vl))})
+    report("kernel_router_topk_lax", us_l, {})
+
+    # vocab-scale threshold mask
+    logits = jnp.asarray(rng.standard_normal((8, 102400)), jnp.float32)
+    f_mask = jax.jit(lambda v: rs.topk_logits_mask(v, 50))
+    us_m = _timeit(f_mask, logits, reps=5)
+    m = f_mask(logits)
+    report("kernel_vocab_topk_mask", us_m,
+           {"selected": int(jnp.sum(m[0]))})
+
+    # full radix sort vs jnp.sort
+    keys = jnp.asarray(rng.integers(0, 2**32, (16, 1024), dtype=np.uint32))
+    f_rsort = jax.jit(lambda v: rs.radix_sort_keys(v, r=8))
+    f_jsort = jax.jit(lambda v: jnp.argsort(v, axis=-1))
+    report("kernel_radix_sort_1024", _timeit(f_rsort, keys, reps=5), {})
+    report("kernel_lax_argsort_1024", _timeit(f_jsort, keys, reps=5), {})
+
+    # Pallas kernels (interpret mode — correctness path on CPU)
+    from repro.kernels import ops
+    xk = jnp.asarray(rng.standard_normal((8, 160)), jnp.float32)
+    t0 = time.perf_counter()
+    v, i = ops.topk(xk, 6)
+    jax.block_until_ready(v)
+    report("kernel_pallas_topk_interpret", (time.perf_counter() - t0) * 1e6,
+           {"note": "interpret-mode validation, not TPU perf"})
+    a = jnp.asarray(rng.standard_normal((128, 256)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((256, 128)), jnp.bfloat16)
+    keep = jnp.asarray(rng.random(256) > 0.3)
+    t0 = time.perf_counter()
+    out = ops.pruned_matmul(a, w, keep)
+    jax.block_until_ready(out)
+    report("kernel_pallas_pruned_matmul_interpret",
+           (time.perf_counter() - t0) * 1e6, {})

@@ -1,0 +1,32 @@
+"""§Roofline: render the dry-run JSON records as the per-(arch x shape x
+mesh) roofline table (reads experiments/dryrun/)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(report, dryrun_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        report("roofline_table", 0.0,
+               {"note": "no dry-run records; run repro.launch.dryrun --all"})
+        return
+    for f in files:
+        rec = json.load(open(f))
+        ro = rec["roofline"]
+        tag = rec.get("tag", "")
+        report(
+            f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}",
+            ro["step_time_s"] * 1e6,
+            {
+                "bottleneck": ro["bottleneck"],
+                "compute_s": round(ro["compute_s"], 5),
+                "memory_s": round(ro["memory_s"], 5),
+                "collective_s": round(ro["collective_s"], 5),
+                "roofline_fraction": round(ro["roofline_fraction"], 4),
+                "useful_flops_ratio": round(ro["useful_ratio"], 3),
+                "peak_GiB_per_dev": round(
+                    rec["memory"]["peak_est_bytes"] / 2**30, 2),
+            })

@@ -1,0 +1,56 @@
+"""S11/S12 sweeps: speed vs (N, k) for TNS and ML, ideal-vs-actual LIFO,
+and the S2/S5 device-programming statistics (Fig. 2e-g)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.datasets import make_dataset
+from repro.core import cost, device_model as dm
+from repro.core import tns as jt
+
+
+def run(report):
+    # ---- S11.1: TNS speed vs k and N (random dataset) -------------------
+    for width in (8, 32):
+        for n in (64, 256):
+            data = make_dataset("random", n, width, seed=1)
+            for k in (1, 2, 4, 6):
+                t0 = time.perf_counter()
+                cyc = int(jt.tns_sort(data, width=width, k=k).cycles)
+                wall = (time.perf_counter() - t0) * 1e6
+                m = cost.sort_metrics(
+                    cyc, n, cost.operating_point("tns", n=n, w=width, k=k))
+                report(f"s11_tns_{width}b_n{n}_k{k}", wall, {
+                    "cycles": cyc,
+                    "num_per_us": round(m.throughput_num_per_us, 2),
+                    "num_per_nJ": round(m.energy_eff, 3)})
+
+    # ---- S12: ML redundant reload cycles, actual vs ideal ---------------
+    data = make_dataset("random", 128, 8, seed=2)
+    for lb in (2, 4):
+        for k in (1, 2, 3):
+            a = jt.tns_sort(data, width=8, k=k, level_bits=lb)
+            i = jt.tns_sort(data, width=8, k=k, level_bits=lb,
+                            ideal_lifo=True)
+            report(f"s12_ml{lb}bit_k{k}", 0.0, {
+                "actual_cycles": int(a.cycles),
+                "ideal_cycles": int(i.cycles),
+                "redundant": int(a.cycles) - int(i.cycles)})
+
+    # ---- Fig. 2e-g / §5.2: device programming statistics -----------------
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    stats = dm.write_verify(rng.integers(0, 8, 100_000), seed=1)
+    wall = (time.perf_counter() - t0) * 1e6
+    report("fig2_write_verify", wall, {
+        "mean_pulses": round(stats.mean_pulses, 2),
+        "paper_mean_pulses": 13.95,
+        "pfr_pct": round(100 * stats.pfr, 3),
+        "paper_pfr_pct": 1.224,
+        "on_off_ratio": dm.ON_OFF_RATIO})
+    report("fig2_level_error", 0.0, {
+        "ml2_err": dm.level_error_rate(2),
+        "ml3_err": dm.level_error_rate(3),
+        "binary_ber": dm.operating_ber(1)})

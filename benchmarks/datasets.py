@@ -1,0 +1,45 @@
+"""The paper's five benchmark sorting datasets (§5.4).
+
+random / normal / clustered are specified exactly; Kruskal's and MapReduce
+are the classical workloads (MST edge weights; word-count key frequencies)
+quantized to W-bit unsigned fixed point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_dataset(name: str, n: int, width: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    hi = 2 ** width
+    if name == "random":
+        return rng.integers(0, hi, n).astype(np.uint64)
+    if name == "normal":
+        mean, std = 2 ** (width - 1), 2 ** (width - 1) / 3
+        v = rng.normal(mean, std, n)
+        return np.clip(v, 0, hi - 1).astype(np.uint64)
+    if name == "clustered":
+        if width == 8:
+            centers, std = [100, 200], 10
+        else:
+            centers, std = [2 ** 15, 2 ** 25], 2 ** 13
+        c = rng.integers(0, len(centers), n)
+        v = rng.normal(np.asarray(centers)[c], std)
+        return np.clip(v, 0, hi - 1).astype(np.uint64)
+    if name == "kruskal":
+        # MST workload: euclidean edge weights of random points — smooth,
+        # heavily mid-range concentrated, many near-duplicates
+        pts = rng.random((n, 2))
+        other = rng.random((n, 2))
+        d = np.sqrt(((pts - other) ** 2).sum(1)) / np.sqrt(2)
+        return (d * (hi - 1)).astype(np.uint64)
+    if name == "mapreduce":
+        # word-count key frequencies: zipf-skewed with massive duplication
+        v = rng.zipf(1.3, n).astype(np.float64)
+        v = np.minimum(v, hi - 1)
+        return v.astype(np.uint64)
+    raise ValueError(name)
+
+
+DATASETS_8 = ("random", "normal", "clustered")
+DATASETS_32 = ("random", "normal", "clustered", "kruskal", "mapreduce")

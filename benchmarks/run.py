@@ -1,0 +1,42 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only sort,apps,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _report(name: str, us: float, derived: dict | None = None) -> None:
+    payload = json.dumps(derived or {}, sort_keys=True)
+    print(f"{name},{us:.1f},{payload}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section filter "
+                         "(sort,apps,sweeps,kernels,roofline)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_apps, bench_kernels, bench_roofline,
+                            bench_sort, bench_sweeps)
+    sections = {
+        "sort": bench_sort.run,          # Fig 4f-g, S18/S19, Table S5
+        "apps": bench_apps.run,          # Fig 5, Fig 6, Fig S28
+        "sweeps": bench_sweeps.run,      # S11, S12, Fig 2e-g
+        "kernels": bench_kernels.run,    # kernel micro-benchmarks
+        "roofline": bench_roofline.run,  # §Roofline table from dry-run
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        print(f"# --- {name} ---")
+        sections[name](_report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Quickstart: the paper's comparison-free sort-in-memory engine end to end.
+
+1. Program a dataset into digit planes (the 1T1R array image).
+2. Sort it with BTS (baseline), TNS, and the CA-TNS strategies; compare
+   DR/cycle counts against comparison-based sorting.
+3. Derive speed / energy / area from the Table-S5-calibrated cost model.
+4. Use the throughput-mode engine (radix select) for tensor-scale top-k.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core import catns, cost, radix_select as rs, ref_tns as rt
+from repro.core import tns as jt
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # -- the paper's worked example (S3/S4) ------------------------------
+    data = [2, 3, 9, 6, 14, 14]
+    b = rt.bts_sort(data, width=4)
+    t = rt.tns_sort(data, width=4, k=3)
+    print(f"S4 example {data}:")
+    print(f"  BTS: {b.cycles} cycles (paper: 24) -> {b.values.tolist()}")
+    print(f"  TNS: {t.cycles} cycles (paper: 10) -> {t.values.tolist()}")
+
+    # -- a realistic dataset through every strategy ----------------------
+    n, w = 256, 32
+    dataset = rng.integers(0, 2 ** 32 - 1, n, dtype=np.uint64)
+    rows = {}
+    rows["bts"] = rt.bts_sort(dataset, width=w).cycles
+    rows["tns"] = int(jt.tns_sort(dataset, width=w, k=4).cycles)
+    rows["mb"] = rows["tns"]                       # eq. (2): T_mb == T_TNS
+    rows["bs"] = rt.bitslice_sort(dataset, width=w, k=4,
+                                  slice_widths=[8, 24]).cycles
+    rows["ml"] = int(jt.tns_sort(dataset, width=w, k=1, level_bits=4).cycles)
+    print(f"\nsort {n} x {w}-bit random:")
+    for strat, cycles in rows.items():
+        point = cost.operating_point(strat, n=n, w=w)
+        m = cost.sort_metrics(cycles, n, point)
+        print(f"  {strat:4s}: {cycles:6d} cycles @ "
+              f"{point.freq_hz/1e6:.0f}MHz -> "
+              f"{m.throughput_num_per_us:8.2f} num/us, "
+              f"{m.energy_eff:7.3f} num/nJ, {m.area_mm2:.3f} mm^2")
+
+    # -- float sorting (Dijkstra's data type) ----------------------------
+    dists = rng.standard_normal(32).astype(np.float16)
+    res = jt.tns_sort(dists, width=16, k=2, fmt=bp.FLOAT)
+    perm = np.asarray(res.perm)
+    assert np.all(np.diff(dists[perm].astype(np.float64)) >= 0)
+    print(f"\nfp16 sort: {int(res.cycles)} cycles for 32 numbers "
+          f"({int(res.drs)/32:.2f} DRs/number)")
+
+    # -- throughput mode: tensor-scale comparison-free top-k -------------
+    logits = jnp.asarray(rng.standard_normal((4, 160)), jnp.float32)
+    vals, idx = rs.topk_values(logits, 6)
+    print(f"\nrouter top-6 of 160 via digit-read min-search: idx[0]="
+          f"{np.asarray(idx)[0].tolist()}")
+    mask = rs.topk_logits_mask(jnp.asarray(rng.standard_normal(1000),
+                                           jnp.float32), 50)
+    print(f"vocab-scale top-50 mask selected {int(mask.sum())} logits")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Cycle-faithful TNS engine in JAX (jittable ``lax.while_loop`` machine).
+
+This is the paper's state controller (Fig. 3a) as a JAX program: one
+``while_loop`` iteration == one controller cycle, with the same phase
+structure as the Python oracle in :mod:`repro.core.ref_tns` (which is the
+ground truth it is tested against, cycle for cycle):
+
+  reload (pop <=1 drained LIFO node / restart at MSB)
+  -> last-number check -> repeat-mode drain -> digit read
+  -> state-record (k-LIFO, drop-oldest) + number-exclude -> min check.
+
+The machine returns the emission permutation *and* the paper's latency
+observables (cycles, digit reads, redundant reload cycles), which feed the
+hardware cost model (:mod:`repro.core.cost`).
+
+``fmt``/``ascending``/``level_bits``/``ideal_lifo``/``k`` are static; the
+digit planes and sign bits are traced arrays, so one compilation serves any
+dataset of the same shape — exactly like the reconfigurable periphery of the
+paper serving any dataset programmed into the array.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as bp
+
+
+class TnsCarry(NamedTuple):
+    alive: jnp.ndarray          # (N,) bool — not yet emitted
+    valid: jnp.ndarray          # (N,) bool — current min-search working set
+    col: jnp.ndarray            # int32 — next digit column (>= D => repeat)
+    lifo_mask: jnp.ndarray      # (k, N) bool
+    lifo_digit: jnp.ndarray     # (k,) int32
+    lifo_len: jnp.ndarray       # int32
+    reload_pending: jnp.ndarray # bool
+    perm: jnp.ndarray           # (N,) int32 emission order
+    out_cnt: jnp.ndarray        # int32
+    cycles: jnp.ndarray         # int32
+    drs: jnp.ndarray            # int32
+    reload_cycles: jnp.ndarray  # int32
+
+
+class TnsOut(NamedTuple):
+    perm: jnp.ndarray
+    cycles: jnp.ndarray
+    drs: jnp.ndarray
+    reload_cycles: jnp.ndarray
+
+
+def _exclude_value(col, fmt: str, ascending: bool, neg_pending):
+    """Binary digit value excluded at ``col`` (jnp scalar), per S6."""
+    if fmt == bp.UNSIGNED:
+        return jnp.int32(1 if ascending else 0)
+    if fmt == bp.TWOS:
+        sign_exc = jnp.int32(0 if ascending else 1)
+        rest_exc = jnp.int32(1 if ascending else 0)
+        return jnp.where(col == 0, sign_exc, rest_exc)
+    # sign-magnitude / float
+    sign_exc = jnp.int32(0 if ascending else 1)
+    rest_exc = jnp.where(neg_pending, jnp.int32(0), jnp.int32(1))
+    return jnp.where(col == 0, sign_exc, rest_exc)
+
+
+def _make_step(digits, sign_bits, fmt, ascending, level_bits, ideal_lifo):
+    D, N = digits.shape
+    BIG = jnp.int32(1 << 30)
+
+    def neg_pending(alive):
+        if sign_bits is None:
+            return jnp.bool_(False)
+        s = sign_bits if ascending else ~sign_bits
+        return jnp.any(alive & s)
+
+    def emit_mask(st: TnsCarry, mask, reload_flag) -> TnsCarry:
+        idx = jnp.argmax(mask).astype(jnp.int32)
+        return st._replace(
+            perm=st.perm.at[st.out_cnt].set(idx),
+            out_cnt=st.out_cnt + 1,
+            alive=st.alive & ~mask,
+            valid=st.valid & ~mask,
+            reload_pending=reload_flag,
+        )
+
+    def push(st: TnsCarry, digit, status) -> TnsCarry:
+        k = st.lifo_mask.shape[0]
+        if k == 0:
+            return st
+        full = st.lifo_len >= k
+        lm = jnp.where(full,
+                       jnp.concatenate([st.lifo_mask[1:], st.lifo_mask[-1:]], 0),
+                       st.lifo_mask)
+        ld = jnp.where(full,
+                       jnp.concatenate([st.lifo_digit[1:], st.lifo_digit[-1:]], 0),
+                       st.lifo_digit)
+        pos = jnp.where(full, k - 1, st.lifo_len)
+        return st._replace(lifo_mask=lm.at[pos].set(status),
+                           lifo_digit=ld.at[pos].set(digit),
+                           lifo_len=jnp.minimum(st.lifo_len + 1, k))
+
+    # ---------------- phase 1: reload ----------------
+    def do_reload(st: TnsCarry):
+        """Returns (state, spent) — spent=True means a redundant pop cycle."""
+        k = st.lifo_mask.shape[0]
+        st = st._replace(reload_pending=jnp.bool_(False))
+        if k == 0:
+            return st._replace(valid=st.alive, col=jnp.int32(0)), jnp.bool_(False)
+        if ideal_lifo:
+            alive_any = jnp.any(st.lifo_mask & st.alive[None, :], axis=1)
+            in_stack = jnp.arange(k) < st.lifo_len
+            keep = in_stack & alive_any
+            new_len = jnp.max(jnp.where(keep, jnp.arange(k, dtype=jnp.int32) + 1, 0))
+            has = new_len > 0
+            ti = jnp.maximum(new_len - 1, 0)
+            live = st.lifo_mask[ti] & st.alive
+            valid = jnp.where(has, live, st.alive)
+            col = jnp.where(has, st.lifo_digit[ti], jnp.int32(0))
+            return st._replace(lifo_len=new_len, valid=valid, col=col), jnp.bool_(False)
+        # actual hardware (S12): pop at most one drained node per cycle
+        has0 = st.lifo_len > 0
+        t0 = jnp.maximum(st.lifo_len - 1, 0)
+        live0 = st.lifo_mask[t0] & st.alive
+        drained0 = has0 & ~jnp.any(live0)
+        len1 = jnp.where(drained0, st.lifo_len - 1, st.lifo_len)
+        has1 = len1 > 0
+        t1 = jnp.maximum(len1 - 1, 0)
+        live1 = st.lifo_mask[t1] & st.alive
+        drained1 = has1 & ~jnp.any(live1)
+        spent = drained0 & drained1
+        valid = jnp.where(has1, live1, st.alive)
+        col = jnp.where(has1, st.lifo_digit[t1], jnp.int32(0))
+        st_ok = st._replace(lifo_len=len1, valid=valid, col=col)
+        st_spent = st._replace(lifo_len=len1, reload_pending=jnp.bool_(True),
+                               reload_cycles=st.reload_cycles + 1)
+        return jax.tree.map(lambda a, b: jnp.where(spent, b, a), st_ok, st_spent), spent
+
+    # ---------------- phases 2-5 ----------------
+    def phase2_emit(st: TnsCarry) -> TnsCarry:
+        return emit_mask(st, st.valid, jnp.any(st.alive & ~st.valid))
+
+    def phase3_repeat(st: TnsCarry) -> TnsCarry:
+        first = jnp.argmax(st.valid).astype(jnp.int32)
+        mask = jnp.zeros_like(st.valid).at[first].set(True)
+        st2 = emit_mask(st, mask, jnp.bool_(False))
+        drained = ~jnp.any(st2.valid)
+        return st2._replace(reload_pending=drained & jnp.any(st2.alive))
+
+    def phase45_dr(st: TnsCarry) -> TnsCarry:
+        row = jnp.take(digits, st.col, axis=0).astype(jnp.int32)
+        st = st._replace(drs=st.drs + 1)
+        if level_bits == 1:
+            ones = jnp.any(st.valid & (row == 1))
+            zeros = jnp.any(st.valid & (row == 0))
+            mixed = ones & zeros
+            exc = _exclude_value(st.col, fmt, ascending, neg_pending(st.alive))
+            keep = st.valid & (row != exc)
+            rec_digit = st.col + 1          # binary tree: record NEXT column
+        else:
+            dmin = jnp.min(jnp.where(st.valid, row, BIG))
+            dmax = jnp.max(jnp.where(st.valid, row, -BIG))
+            mixed = dmin != dmax
+            sel = dmin if ascending else dmax
+            keep = st.valid & (row == sel)
+            rec_digit = st.col              # quad tree: record CURRENT column
+        st_pushed = push(st, rec_digit, st.valid)
+        st = jax.tree.map(lambda a, b: jnp.where(mixed, a, b), st_pushed, st)
+        valid_new = jnp.where(mixed, keep, st.valid)
+        st = st._replace(valid=valid_new)
+        nv = jnp.sum(valid_new)
+        at_lsb = st.col == D - 1
+
+        def single(s):
+            return phase2_emit(s)
+
+        def lsb_dup(s):
+            s2 = phase3_repeat(s)
+            return s2._replace(col=jnp.int32(D))
+
+        def descend(s):
+            return s._replace(col=s.col + 1)
+
+        return jax.lax.cond(
+            nv == 1, single,
+            lambda s: jax.lax.cond(at_lsb, lsb_dup, descend, s),
+            st)
+
+    def step(st: TnsCarry) -> TnsCarry:
+        st = st._replace(cycles=st.cycles + 1)
+        st1, spent = jax.lax.cond(
+            st.reload_pending, do_reload,
+            lambda s: (s, jnp.bool_(False)), st)
+
+        def rest(s: TnsCarry) -> TnsCarry:
+            nv = jnp.sum(s.valid)
+            return jax.lax.cond(
+                nv == 1, phase2_emit,
+                lambda q: jax.lax.cond(q.col >= D, phase3_repeat, phase45_dr, q),
+                s)
+
+        return jax.lax.cond(spent, lambda s: s, rest, st1)
+
+    return step
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "fmt", "ascending", "level_bits", "ideal_lifo",
+                     "stop_after"))
+def tns_sort_planes(digits: jnp.ndarray,
+                    sign_bits: Optional[jnp.ndarray] = None,
+                    *, k: int, fmt: str = bp.UNSIGNED, ascending: bool = True,
+                    level_bits: int = 1, ideal_lifo: bool = False,
+                    stop_after: Optional[int] = None) -> TnsOut:
+    """Run TNS on a (D, N) digit-plane matrix.  ``stop_after`` emits only the
+    first m min/max values (the paper's in-situ-pruning use: locate the p%
+    smallest weights and stop, §3.2)."""
+    digits = digits.astype(jnp.int32)
+    D, N = digits.shape
+    stop_n = N if stop_after is None else min(stop_after, N)
+    kk = max(k, 1)
+    init = TnsCarry(
+        alive=jnp.ones(N, dtype=bool),
+        valid=jnp.ones(N, dtype=bool),
+        col=jnp.int32(0),
+        lifo_mask=jnp.zeros((kk, N), dtype=bool),
+        lifo_digit=jnp.zeros(kk, dtype=jnp.int32),
+        lifo_len=jnp.int32(0),
+        reload_pending=jnp.bool_(False),
+        perm=jnp.full(N, -1, dtype=jnp.int32),
+        out_cnt=jnp.int32(0),
+        cycles=jnp.int32(0),
+        drs=jnp.int32(0),
+        reload_cycles=jnp.int32(0),
+    )
+    if k == 0:
+        init = init._replace(lifo_mask=jnp.zeros((0, N), dtype=bool),
+                             lifo_digit=jnp.zeros(0, dtype=jnp.int32))
+    step = _make_step(digits, sign_bits, fmt, ascending, level_bits, ideal_lifo)
+    limit = jnp.int32(4 * N * D + 64)
+
+    def cond(st: TnsCarry):
+        return (st.out_cnt < stop_n) & (st.cycles < limit)
+
+    final = jax.lax.while_loop(cond, step, init)
+    return TnsOut(final.perm, final.cycles, final.drs, final.reload_cycles)
+
+
+def tns_sort(values, width: int, k: int, fmt: str = bp.UNSIGNED,
+             ascending: bool = True, level_bits: int = 1,
+             ideal_lifo: bool = False, stop_after: Optional[int] = None) -> TnsOut:
+    """Convenience wrapper: encode ``values`` (host-side, like programming
+    the memristor array) then run the jitted machine."""
+    x = np.asarray(values)
+    if level_bits == 1:
+        digits = bp.to_bitplanes(x, width, fmt)
+    else:
+        digits = bp.to_digitplanes(x, width, fmt, level_bits)
+    sign = None
+    if fmt in (bp.SIGNMAG, bp.FLOAT):
+        u = bp.raw_bits(x, width, fmt).astype(np.uint64)
+        sign = jnp.asarray(((u >> np.uint64(width - 1)) & np.uint64(1)).astype(bool))
+    return tns_sort_planes(jnp.asarray(digits.astype(np.int32)), sign,
+                           k=k, fmt=fmt, ascending=ascending,
+                           level_bits=level_bits, ideal_lifo=ideal_lifo,
+                           stop_after=stop_after)

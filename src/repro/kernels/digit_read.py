@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: one digit-read min-search over raw bit-planes.
+
+This is the paper's periphery (sense amplifiers + all-0's/1's check + number
+exclusion, Fig. 3a / S7) for a complete min/max-search iteration, fused into
+a single kernel.  Input is the physical array image: (B, W, N) uint8 bit
+planes, MSB first — exactly what ``bitplane.to_bitplanes`` programs.  The
+kernel walks the W planes with the NE mask in vector registers and returns
+
+* the min/max mask (ties included — the "survival numbers"), and
+* the number of *useful* DRs (mixed reads, i.e. reads that caused a number
+  exclusion) — the quantity TNS tries to minimize.
+
+One grid program per batch row; the full (W, N) tile stays in VMEM
+(W<=32, N<=64k => <=2 MB of uint8, well inside the 16 MB VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dr_kernel(planes_ref, mask_ref, drs_ref, *, width: int, n_valid: int,
+               ascending: bool):
+    planes = planes_ref[0]                                  # (W, N) uint8
+    w, n = planes.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    valid = lane < n_valid
+    useful = jnp.zeros((), dtype=jnp.int32)
+    exc = jnp.uint8(1) if ascending else jnp.uint8(0)
+    for col in range(width):
+        row = planes[col]
+        hit = valid & (row == exc)
+        keep = valid & (row != exc)
+        mixed = jnp.any(hit) & jnp.any(keep)
+        valid = jnp.where(mixed, keep, valid)
+        useful = useful + mixed.astype(jnp.int32)
+    mask_ref[0] = valid
+    drs_ref[0, 0] = useful
+
+
+@functools.partial(jax.jit, static_argnames=("ascending", "interpret"))
+def min_search(planes: jnp.ndarray, ascending: bool = True,
+               interpret: bool = True):
+    """(min_mask, useful_drs) for batched bit-planes (B, W, N) uint8.
+
+    ``min_mask[b]`` marks every element attaining the min (max when
+    ``ascending=False``) — the survival numbers of one search iteration."""
+    assert planes.ndim == 3 and planes.dtype == jnp.uint8
+    b, w, n = planes.shape
+    n_pad = max(128, -(-n // 128) * 128)
+    planes_p = jnp.zeros((b, w, n_pad), dtype=jnp.uint8)
+    if ascending:
+        # pad with 1s so padding never wins a min search
+        planes_p = planes_p.at[:, :, n:].set(1)
+    planes_p = planes_p.at[:, :, :n].set(planes)
+    mask, drs = pl.pallas_call(
+        functools.partial(_dr_kernel, width=w, n_valid=n, ascending=ascending),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, w, n_pad), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, n_pad), jnp.bool_),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32)],
+        interpret=interpret,
+    )(planes_p)
+    return mask[:, :n], drs[:, 0]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core import radix_select as rs
+
+
+def topk_keys_ref(keys: jnp.ndarray, k: int):
+    """Oracle for radix_topk.topk_keys: k smallest keys ascending + first-
+    tie indices, via the core throughput engine (itself tested vs lax)."""
+    vals, idx = rs.extract_topk(keys, k, r=4)
+    return vals, idx
+
+
+def min_search_ref(planes: jnp.ndarray, ascending: bool = True):
+    """Oracle for digit_read.min_search on (B, W, N) uint8 planes."""
+    b, w, n = planes.shape
+    shifts = jnp.arange(w - 1, -1, -1, dtype=jnp.uint32)
+    keys = jnp.sum(planes.astype(jnp.uint32) << shifts[None, :, None], axis=1)
+    target = jnp.min(keys, axis=1) if ascending else jnp.max(keys, axis=1)
+    mask = keys == target[:, None]
+    # useful DRs: walk the planes, count mixed reads (oracle loop)
+    valid = jnp.ones((b, n), dtype=bool)
+    exc = jnp.uint8(1) if ascending else jnp.uint8(0)
+    useful = jnp.zeros((b,), dtype=jnp.int32)
+    for col in range(w):
+        row = planes[:, col, :]
+        hit = valid & (row == exc)
+        keep = valid & (row != exc)
+        mixed = jnp.any(hit, axis=1) & jnp.any(keep, axis=1)
+        valid = jnp.where(mixed[:, None], keep, valid)
+        useful = useful + mixed.astype(jnp.int32)
+    return mask, useful
+
+
+def pack_keys_ref(x: jnp.ndarray) -> jnp.ndarray:
+    if x.dtype == jnp.bfloat16:
+        x = x.astype(jnp.float32)
+    return bp.sort_key_jnp(x)
+
+
+def unpack_keys_f32_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    return bp.key_to_value_jnp(keys, jnp.float32)
+
+
+def pruned_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                      keep_mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x * keep_mask.astype(x.dtype)[None, :], w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+TARGET hardware (TPU v5e):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+  collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``compiled.cost_analysis()`` reports per-device FLOPs / bytes for the SPMD-
+partitioned module.  Collective bytes are not in cost_analysis: we parse
+the optimized HLO and sum the output-shape bytes of every collective op
+(-start variants counted once, -done skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e target constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*\S+\s*=\s*(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w[\w\d]*)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Per-collective-op byte totals from optimized HLO (per device)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue
+        b = _shape_bytes(m.group("type"))
+        out[m.group("op")] += b
+        counts[m.group("op")] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    model_flops: float           # 6*N*D (train) / 2*N*D (serve), global
+    useful_ratio: float          # model_flops / (flops_per_device * chips)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline this step achieves assuming
+        perfect overlap: compute / max(all terms).  1.0 == compute-bound at
+        peak; lower == memory or collective dominated."""
+        if self.step_time_s == 0:
+            return 0.0
+        return self.compute_s / self.step_time_s
+
+    @property
+    def model_flops_util(self) -> float:
+        """MFU upper bound implied by the roofline: useful model FLOPs per
+        second at the roofline step time over peak."""
+        if self.step_time_s == 0:
+            return 0.0
+        return (self.model_flops / self.chips) / self.step_time_s / PEAK_FLOPS
+
+    def to_dict(self) -> Dict:
+        return {**dataclasses.asdict(self),
+                "bottleneck": self.bottleneck,
+                "step_time_s": self.step_time_s,
+                "roofline_fraction": self.roofline_fraction,
+                "model_flops_util": self.model_flops_util}
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<op>[\w-]+)\(", re.M)
+
+
+def hlo_byte_profile(hlo_text: str, top: int = 15) -> list:
+    """Histogram of HLO op kinds by total OUTPUT bytes (per device) —
+    the 'profile' available without hardware; used to pick targets for the
+    memory-roofline hillclimb."""
+    agg: Dict[str, float] = {}
+    cnt: Dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _shape_bytes(m.group("type"))
+        agg[op] = agg.get(op, 0) + b
+        cnt[op] = cnt.get(op, 0) + 1
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    return [(op, int(b), cnt[op]) for op, b in rows]
+
+
+def cost_value(cost: Optional[dict], key: str) -> float:
+    if not cost:
+        return 0.0
+    return float(cost.get(key, 0.0))
+
+
+def analyze(compiled, chips: int, model_flops: float,
+            hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = cost_value(cost, "flops")
+    byts = cost_value(cost, "bytes accessed")
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(txt)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll["total_bytes"] / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=float(coll["total_bytes"]),
+        chips=chips,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+    )

@@ -1,0 +1,185 @@
+"""Parameter / optimizer / cache / batch PartitionSpecs.
+
+Policy: Megatron-style tensor parallelism over the "model" axis combined
+with ZeRO/FSDP sharding of parameters and optimizer state over the "data"
+axis; the batch shards over every non-model axis (including "pod").  The
+pod axis deliberately does NOT shard parameters — FSDP all-gathers stay on
+intra-pod ICI, and only gradient all-reduces cross the pod interconnect
+(where int8 compression applies).
+
+Every rule passes through a divisibility check: an axis that does not
+divide the dimension is dropped (e.g. qwen2-moe's 60 experts on a 16-way
+model axis fall back to sharding the expert FFN width instead; a batch of
+1 in long_500k falls back to replicated tokens).  This keeps one policy
+table valid across all 10 architectures x 4 shapes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape, spec: P) -> P:
+    """Drop spec axes that do not divide their dimension."""
+    ndim = len(shape)
+    entries = list(spec) + [None] * (ndim - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries[:ndim]):
+        out.append(ax if ax and dim % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+# rule table: (regex on the last two path keys, base_ndim, spec builder)
+def _rules(dp: str, tp: str):
+    return [
+        (r"embed/tok$",     2, P(tp, dp)),
+        (r"embed/head$",    2, P(dp, tp)),
+        (r"attn/w[qkv]$",   2, P(dp, tp)),
+        (r"attn/wo$",       2, P(tp, dp)),
+        (r"attn/wq_a$",     2, P(dp, None)),
+        (r"attn/wq_b$",     2, P(None, tp)),
+        (r"attn/wkv_a$",    2, P(dp, None)),
+        (r"attn/w[kv]_b$",  2, P(None, tp)),
+        (r"xattn/w[qkv]$",  2, P(dp, tp)),
+        (r"xattn/wo$",      2, P(tp, dp)),
+        (r"(mlp|shared)/wi$", 2, P(dp, tp)),
+        (r"(mlp|shared)/wo$", 2, P(tp, dp)),
+        (r"moe/router$",    2, P(dp, None)),
+        (r"moe/wi$",        3, P(tp, dp, None)),   # expert-parallel first
+        (r"moe/wo$",        3, P(tp, None, dp)),
+        (r"ssm/in_proj$",   2, P(dp, tp)),
+        (r"ssm/out_proj$",  2, P(tp, dp)),
+        (r"ssm/conv_[wb]$", 0, P()),               # small; replicate
+        (r".*",             0, P()),               # norms, scalars, biases
+    ]
+
+
+_MOE_WI_FALLBACK = {"moe/wi": lambda dp, tp: P(None, dp, tp),
+                    "moe/wo": lambda dp, tp: P(None, tp, dp)}
+
+
+def _path_str(path) -> str:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+    return "/".join(keys)
+
+
+def spec_for(mesh: Mesh, path, leaf, dp: str = "data", tp: str = "model") -> P:
+    """PartitionSpec for one param leaf.  Stacked layouts (extra leading
+    layer axes) get None-padded on the left."""
+    ps = _path_str(path)
+    shape = leaf.shape
+    for pat, base_ndim, spec in _rules(dp, tp):
+        if re.search(pat, ps):
+            extra = len(shape) - len(spec)
+            if extra < 0:       # e.g. rule matched a scalar fallback
+                spec = P(*list(spec)[:len(shape)])
+                extra = len(shape) - len(spec)
+            full = P(*([None] * extra + list(spec)))
+            fitted = _fit(mesh, shape, full)
+            # MoE expert-parallel fallback: if E didn't divide, try TP
+            # inside the expert FFN instead.
+            m = re.search(r"moe/w[io]$", ps)
+            if m and fitted[len(shape) - len(spec)] is None:
+                key = "moe/wi" if ps.endswith("wi") else "moe/wo"
+                alt = _MOE_WI_FALLBACK[key](dp, tp)
+                full = P(*([None] * extra + list(alt)))
+                fitted = _fit(mesh, shape, full)
+            return fitted
+    return P()
+
+
+def param_specs(mesh: Mesh, params_tree, dp="data",
+                tp: str = "model"):
+    """Pytree of PartitionSpec matching ``params_tree`` (params, grads, or
+    AdamW m/v — anything param-shaped)."""
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = [spec_for(mesh, path, leaf, dp, tp) for path, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def opt_specs(mesh: Mesh, opt_state, dp: str = "data", tp: str = "model"):
+    from repro.optim.adamw import OptState
+    return OptState(
+        m=param_specs(mesh, opt_state.m, dp, tp),
+        v=param_specs(mesh, opt_state.v, dp, tp),
+        err=param_specs(mesh, opt_state.err, dp, tp)
+        if opt_state.err is not None else None,
+        count=P(),
+    )
+
+
+def batch_spec(mesh: Mesh, shape, batch_axes: Tuple[str, ...]) -> P:
+    return _fit(mesh, shape, P(batch_axes, *([None] * (len(shape) - 1))))
+
+
+def cache_specs(mesh: Mesh, cache_tree, batch_axes: Tuple[str, ...],
+                tp: str = "model", seq_shard: bool = False):
+    """KV/SSM cache sharding: batch over data axes; heads (attn K/V,
+    SSM state heads) over the model axis, falling back to head_dim then
+    replicated when head counts don't divide.
+
+    ``seq_shard=True``: shard the cache SEQUENCE dim over the model axis
+    instead — attention then needs only tiny cross-device softmax
+    reductions rather than score all-reduces over a contracted
+    head_dim/latent axis (the decode-cell §Perf optimization)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        extra = 0
+        # stacked caches carry 1-2 leading layer axes before batch; detect
+        # batch dim as the first dim matching none of the layer counts is
+        # fragile — instead rules are written from the RIGHT.
+        if re.search(r"/(k|v)$", ps) and len(shape) >= 4:
+            # (..., B, S, KV, hd)
+            if seq_shard:
+                fitted = _fit(mesh, shape[-4:], P(batch_axes, tp, None, None))
+                return P(*([None] * (len(shape) - 4) + list(fitted)))
+            base = P(batch_axes, None, tp, None)
+            fitted = _fit(mesh, shape[-4:], base)
+            if fitted[2] is None:   # KV heads don't divide: shard head_dim
+                fitted = _fit(mesh, shape[-4:],
+                              P(batch_axes, None, None, tp))
+            return P(*([None] * (len(shape) - 4) + list(fitted)))
+        if re.search(r"/c_kv$|/k_rope$", ps) and len(shape) >= 3:
+            if seq_shard:
+                fitted = _fit(mesh, shape[-3:], P(batch_axes, tp, None))
+                return P(*([None] * (len(shape) - 3) + list(fitted)))
+            base = P(batch_axes, None, tp)                 # (B, S, L)
+            fitted = _fit(mesh, shape[-3:], base)
+            return P(*([None] * (len(shape) - 3) + list(fitted)))
+        if re.search(r"/ssm$", ps) and len(shape) >= 4:
+            base = P(batch_axes, tp, None, None)           # (B, H, P, S)
+            fitted = _fit(mesh, shape[-4:], base)
+            return P(*([None] * (len(shape) - 4) + list(fitted)))
+        if re.search(r"/conv$", ps) and len(shape) >= 3:
+            base = P(batch_axes, None, tp)                 # (B, K-1, C)
+            fitted = _fit(mesh, shape[-3:], base)
+            return P(*([None] * (len(shape) - 3) + list(fitted)))
+        # placeholders / counters
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [one(path, leaf) for path, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,97 @@
+"""Jit-able train / prefill / decode step builders (the functions the
+dry-run lowers and the drivers execute)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stacked
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, ocfg: adamw.AdamWConfig,
+                    remat: str = "full", accum: int = 1,
+                    with_frontend: bool = False, unroll: bool = False,
+                    accum_dtype=jnp.float32):
+    """(params, opt_state, tokens, labels[, frontend]) ->
+    (params, opt_state, metrics).  ``accum`` > 1 runs gradient-accumulation
+    microbatches under lax.scan (memory control for the big archs);
+    ``accum_dtype=jnp.bfloat16`` halves the accumulation buffer (the
+    optimizer still runs fp32 m/v)."""
+
+    def loss(p, xb, yb, fe):
+        return stacked.loss_fn(p, cfg, xb, yb, frontend=fe, remat=remat,
+                               unroll=unroll)
+
+    def train_step(params, opt_state, tokens, labels, frontend=None):
+        if accum == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, tokens, labels, frontend)
+        else:
+            B = tokens.shape[0]
+            assert B % accum == 0
+            mb = B // accum
+            xs = (tokens.reshape(accum, mb, -1),
+                  labels.reshape(accum, mb, -1),
+                  frontend.reshape(accum, mb, *frontend.shape[1:])
+                  if frontend is not None else None)
+
+            def micro(carry, x):
+                g_acc, l_acc = carry
+                xb, yb, fe = x
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, xb, yb, fe)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (g_sum, l_sum), _ = jax.lax.scan(micro, (zeros, 0.0), xs)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / accum, g_sum)
+            l = l_sum / accum
+            metrics = {"nll": l, "aux": jnp.zeros((), jnp.float32)}
+        new_p, new_s, om = adamw.update(params, grads, opt_state, ocfg)
+        return new_p, new_s, {"loss": l, **metrics, **om}
+
+    if with_frontend:
+        return train_step
+    return lambda p, s, t, y: train_step(p, s, t, y, None)
+
+
+def make_prefill_step(cfg: ArchConfig, with_frontend: bool = False,
+                      unroll: bool = False):
+    """(params, tokens, caches[, frontend]) -> (logits, caches): batched
+    prefill through the serving path (writes the KV/SSM caches)."""
+
+    def prefill(params, tokens, caches, frontend=None):
+        logits, new_caches, _ = stacked.forward(
+            params, cfg, tokens, frontend=frontend, caches=caches,
+            unroll=unroll)
+        return logits, new_caches
+
+    if with_frontend:
+        return prefill
+    return lambda p, t, c: prefill(p, t, c, None)
+
+
+def make_decode_step(cfg: ArchConfig, with_frontend: bool = False,
+                     unroll: bool = False):
+    """(params, token(B,1), pos(B,), caches[, frontend]) ->
+    (logits, caches): one serving step against a seq_len-deep cache."""
+
+    def decode(params, token, pos, caches, frontend=None):
+        positions = pos[:, None].astype(jnp.int32)
+        logits, new_caches, _ = stacked.forward(
+            params, cfg, token, frontend=frontend, positions=positions,
+            caches=caches, unroll=unroll)
+        return logits, new_caches
+
+    if with_frontend:
+        return decode
+    return lambda p, t, z, c: decode(p, t, z, c, None)

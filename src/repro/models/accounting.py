@@ -1,0 +1,54 @@
+"""Parameter / FLOP accounting — feeds the roofline's MODEL_FLOPS = 6*N*D
+(dense) or 6*N_active*D (MoE) without allocating any memory."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(param_shapes(cfg)))
+
+
+def param_bytes(cfg: ArchConfig) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree.leaves(param_shapes(cfg)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token: MoE counts only top-k routed experts
+    (+ shared), everything else counts fully."""
+    total = param_count(cfg)
+    if not cfg.moe:
+        return total
+    shapes = param_shapes(cfg)
+    routed = 0
+    for blk in shapes["blocks"]:
+        if "moe" in blk:
+            routed += int(blk["moe"]["wi"].size) + int(blk["moe"]["wo"].size)
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    return total - routed + int(routed * k / E)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline: 6*N(active)*D for training,
+    2*N(active)*D for a forward-only serve step (D = tokens processed)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * shape.global_batch

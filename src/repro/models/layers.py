@@ -1,0 +1,383 @@
+"""Pure-JAX NN layers for the model zoo (no flax/optax — params are nested
+dicts, every layer is an (init, apply) pair).
+
+Covers the assigned architectures' needs: RMSNorm (+ qk_norm),
+non-parametric LayerNorm (OLMo), RoPE, GQA/MQA attention with head_dim
+override (Gemma), MLA with weight absorption for decode (DeepSeek-V2),
+SwiGLU/GeGLU MLPs, cross-attention (Llama-3.2-Vision), and KV caches.
+
+Sharding: activations are annotated with logical constraints through
+``shard.constrain`` (no-ops outside a mesh context); parameter
+PartitionSpecs come from ``repro.launch.sharding.param_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models import shard
+
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, key) -> Dict:
+    if cfg.norm == "nonparam_ln":
+        return {}
+    return {"w": jnp.ones((cfg.d_model,), cfg.pdtype())}
+
+
+def apply_norm(params: Dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "nonparam_ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        return out.astype(x.dtype)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * rms).astype(x.dtype) * params["w"].astype(x.dtype)
+
+
+def _head_rms(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * rms).astype(x.dtype) * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, D) with D even; positions: (B, T)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, T, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA/MQA attention (+ cross-attention variant)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": _init(ks[0], (d, H * hd), cfg.pdtype()),
+        "wk": _init(ks[1], (d, KV * hd), cfg.pdtype()),
+        "wv": _init(ks[2], (d, KV * hd), cfg.pdtype()),
+        "wo": _init(ks[3], (H * hd, d), cfg.pdtype()),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype())
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype())
+    return p
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
+          impl: str = "naive", chunk: int = 1024):
+    """q: (B,T,H,hd), k/v: (B,S,KV,hd) — grouped heads expanded by repeat.
+
+    ``impl='chunked'``: flash-style online softmax over KV chunks — never
+    materializes the (T, S) score matrix (beyond-paper memory-roofline
+    optimization; numerically equal to naive, pinned by tests)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if impl == "chunked" and S > chunk and S % chunk == 0:
+        return _sdpa_chunked(q, k, v, causal, q_pos, kv_len, chunk)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = shard.constrain(scores / np.sqrt(hd), "act_scores")
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(T)[None, :]
+        kp = jnp.arange(S)[None, :]
+        mask = qp[:, None, :, None] >= kp[:, None, None, :]
+        if kv_len is not None:   # decode: only attend to filled cache slots
+            mask = mask & (kp[:, None, None, :] < kv_len[:, None, None, None])
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, causal, q_pos, kv_len, chunk):
+    B, T, H, hd = q.shape
+    S, dk, dv = k.shape[1], k.shape[-1], v.shape[-1]   # MLA: dk != dv
+    nc = S // chunk
+    qp = q_pos if q_pos is not None else jnp.arange(T)[None, :]
+    qf = q.astype(jnp.float32)
+    ks = jnp.moveaxis(k.reshape(B, nc, chunk, H, dk), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, chunk, H, dv), 1, 0)
+    offs = jnp.arange(nc) * chunk
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, off = inp
+        s = jnp.einsum("bthd,bshd->bhts", qf, kc.astype(jnp.float32))
+        s = s / np.sqrt(hd)
+        kp = off + jnp.arange(chunk)[None, :]
+        if causal:
+            mask = qp[:, None, :, None] >= kp[:, None, None, :]
+            if kv_len is not None:
+                mask = mask & (kp[:, None, None, :]
+                               < kv_len[:, None, None, None])
+            s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhts,bshd->bhtd", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, H, T), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, T), jnp.float32),
+            jnp.zeros((B, H, T, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (ks, vs, offs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def apply_attn(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
+               positions: jnp.ndarray,
+               cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (x @ params["wk"]).reshape(B, T, KV, hd)
+    v = (x @ params["wv"]).reshape(B, T, KV, hd)
+    q = shard.constrain(q, "act_heads")
+    k = shard.constrain(k, "act_kv_heads")
+    if cfg.qk_norm:
+        q = _head_rms(q, params["q_norm"])
+        k = _head_rms(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        # decode: write this step's k/v at `positions`, attend over cache
+        ck, cv = cache["k"], cache["v"]
+        idx = positions[:, 0]
+        ck = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+            c, kk, (i, 0, 0)))(ck, k, idx)
+        cv = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+            c, vv, (i, 0, 0)))(cv, v, idx)
+        new_cache = {"k": ck, "v": cv}
+        out = _sdpa(q, ck, cv, causal=True, q_pos=positions,
+                    kv_len=idx + T, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    else:
+        out = _sdpa(q, k, v, causal=True, q_pos=positions,
+                    impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    out = out.reshape(B, T, H * hd)
+    return shard.constrain(out @ params["wo"], "act_embed"), new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype()),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image-fusion layers; Llama-3.2-Vision style gating)
+# ---------------------------------------------------------------------------
+
+
+def init_xattn(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 5)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    fd = cfg.frontend_dim or d
+    return {
+        "wq": _init(ks[0], (d, H * hd), cfg.pdtype()),
+        "wk": _init(ks[1], (fd, KV * hd), cfg.pdtype()),
+        "wv": _init(ks[2], (fd, KV * hd), cfg.pdtype()),
+        "wo": _init(ks[3], (H * hd, d), cfg.pdtype()),
+        "gate": jnp.zeros((), cfg.pdtype()),
+    }
+
+
+def apply_xattn(params: Dict, x: jnp.ndarray, enc: jnp.ndarray,
+                cfg: ArchConfig) -> jnp.ndarray:
+    """x: (B,T,d) text stream; enc: (B,F,frontend_dim) patch embeddings."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (enc @ params["wk"]).reshape(B, enc.shape[1], KV, hd)
+    v = (enc @ params["wv"]).reshape(B, enc.shape[1], KV, hd)
+    out = _sdpa(q, k, v, causal=False)
+    out = out.reshape(B, T, H * hd) @ params["wo"]
+    return jnp.tanh(params["gate"]).astype(x.dtype) * out
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = _init(ks[0], (d, cfg.q_lora_rank), cfg.pdtype())
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), cfg.pdtype())
+        p["wq_b"] = _init(ks[1], (cfg.q_lora_rank, H * (dn + dr)), cfg.pdtype())
+    else:
+        p["wq"] = _init(ks[0], (d, H * (dn + dr)), cfg.pdtype())
+    p["wkv_a"] = _init(ks[2], (d, cfg.kv_lora_rank + dr), cfg.pdtype())
+    p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), cfg.pdtype())
+    p["wk_b"] = _init(ks[3], (cfg.kv_lora_rank, H * dn), cfg.pdtype())
+    p["wv_b"] = _init(ks[4], (cfg.kv_lora_rank, H * dv), cfg.pdtype())
+    p["wo"] = _init(ks[5], (H * dv, d), cfg.pdtype())
+    return p
+
+
+def _mla_q(params, x, cfg, positions):
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        ql = _head_rms(x @ params["wq_a"], params["q_norm"])
+        q = (ql @ params["wq_b"]).reshape(B, T, H, dn + dr)
+    else:
+        q = (x @ params["wq"]).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_nope = shard.constrain(q_nope, "act_heads")
+    q_rope = shard.constrain(rope(q_rope, positions, cfg.rope_theta),
+                             "act_heads")
+    return q_nope, q_rope
+
+
+def apply_mla(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
+              positions: jnp.ndarray,
+              cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Training/prefill: naive expansion.  Decode (cache given): latent
+    weight-absorbed attention over the compressed KV cache — the memory win
+    that makes MLA serve 128-head models."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    L = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+
+    kv = x @ params["wkv_a"]                                  # (B,T,L+dr)
+    c_kv = _head_rms(kv[..., :L], params["kv_norm"])          # latent
+    k_rope = rope(kv[..., L:][:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is None:
+        k_nope = shard.constrain(
+            (c_kv @ params["wk_b"]).reshape(B, T, H, dn), "act_heads")
+        v = shard.constrain(
+            (c_kv @ params["wv_b"]).reshape(B, T, H, dv), "act_heads")
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(q, k, v, causal=True, q_pos=positions,
+                    impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        out = out.reshape(B, T, H * dv)
+        return shard.constrain(out @ params["wo"], "act_embed"), None
+
+    # ---- decode: absorbed attention in latent space -----------------
+    idx = positions[:, 0]
+    cc = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["c_kv"], c_kv, idx)
+    cr = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["k_rope"], k_rope[:, :, 0, :], idx)
+    new_cache = {"c_kv": cc, "k_rope": cr}
+    S = cc.shape[1]
+    wk_b = params["wk_b"].reshape(L, H, dn)
+    # absorb W_uk into q: q_lat (B,T,H,L)
+    q_lat = jnp.einsum("bthn,lhn->bthl", q_nope, wk_b)
+    scores = (jnp.einsum("bthl,bsl->bhts", q_lat, cc,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bthr,bsr->bhts", q_rope, cr,
+                           preferred_element_type=jnp.float32))
+    scores = scores / np.sqrt(dn + dr)
+    kp = jnp.arange(S)[None, :]
+    mask = (positions[:, None, :, None] >= kp[:, None, None, :]) & \
+           (kp[:, None, None, :] < (idx + T)[:, None, None, None])
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhts,bsl->bthl", probs, cc)           # (B,T,H,L)
+    wv_b = params["wv_b"].reshape(L, H, dv)
+    out = jnp.einsum("bthl,lhv->bthv", o_lat, wv_b).reshape(B, T, H * dv)
+    return shard.constrain(out @ params["wo"], "act_embed"), new_cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.dtype()),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                            cfg.dtype()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key, d_ff: Optional[int] = None) -> Dict:
+    ks = jax.random.split(key, 2)
+    ff = d_ff or cfg.d_ff
+    return {
+        "wi": _init(ks[0], (cfg.d_model, 2 * ff), cfg.pdtype()),
+        "wo": _init(ks[1], (ff, cfg.d_model), cfg.pdtype()),
+    }
+
+
+def apply_mlp(params: Dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    h = x @ params["wi"]
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if cfg.mlp_act == "silu" else jax.nn.gelu(gate)
+    h = shard.constrain(act * up, "act_ff")
+    return shard.constrain(h @ params["wo"], "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "tok": _init(ks[0], (cfg.vocab, cfg.d_model), cfg.pdtype(), scale=0.02),
+        "head": _init(ks[1], (cfg.d_model, cfg.vocab), cfg.pdtype()),
+    }
+
+
+def embed_tokens(params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return shard.constrain(jnp.take(params["tok"], tokens, axis=0),
+                           "act_embed")
+
+
+def lm_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return shard.constrain(
+        jnp.einsum("btd,dv->btv", x, params["head"],
+                   preferred_element_type=jnp.float32), "act_vocab")

@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) blocks — pure JAX.
+
+Chunked parallel form for training/prefill (intra-chunk quadratic term +
+inter-chunk state recurrence via ``lax.scan``), single-step recurrent form
+for decode.  Used by mamba2-1.3b (attn-free) and zamba2-2.7b (hybrid).
+
+Shapes: d_inner = expand * d_model, H heads of P = d_inner/H channels,
+state size S per head, single B/C group (n_groups=1), causal depthwise
+conv (kernel 4) on x/B/C inputs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import shard
+from repro.models.config import ArchConfig
+from repro.models.layers import _init
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = cfg.ssm_heads or d_in // P
+    S = cfg.ssm_state
+    return d_in, H, P, S
+
+
+def init_ssm(cfg: ArchConfig, key) -> Dict:
+    d_in, H, P, S = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * S + H          # z, x, B, C, dt
+    conv_ch = d_in + 2 * S
+    return {
+        "in_proj": _init(ks[0], (cfg.d_model, d_proj), cfg.pdtype()),
+        "conv_w": _init(ks[1], (cfg.conv_kernel, conv_ch), cfg.pdtype(),
+                        scale=1.0 / np.sqrt(cfg.conv_kernel)),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype()),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), cfg.pdtype()),
+        "out_proj": _init(ks[2], (d_in, cfg.d_model), cfg.pdtype()),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, H, P, S = _dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * S]
+    dt = proj[..., d_in + d_in + 2 * S:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  xBC: (B, L, C); w: (K, C).
+    With ``state`` (B, K-1, C): streaming decode — returns new state."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xBC[:, : K - 1])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def _gated_norm(y, z, w):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    return (yf * rms).astype(y.dtype) * w.astype(y.dtype)
+
+
+def apply_ssm(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
+              cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, L, d_model).  cache => single-step decode (L==1)."""
+    d_in, H, P, S = _dims(cfg)
+    Bb, L, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+
+    if cache is not None:
+        conv_state = cache["conv"]
+        xBC, conv_state = _causal_conv(xBC, params["conv_w"],
+                                       params["conv_b"], conv_state)
+        xs = xBC[..., :d_in].reshape(Bb, L, H, P)
+        Bmat = xBC[..., d_in:d_in + S]                                # (B,L,S)
+        Cmat = xBC[..., d_in + S:]
+        h = cache["ssm"]                                              # (B,H,P,S)
+        # single step (L == 1)
+        a = jnp.exp(A[None, :] * dt[:, 0])                            # (B,H)
+        dbx = jnp.einsum("bhp,bs,bh->bhps", xs[:, 0], Bmat[:, 0], dt[:, 0])
+        h = h * a[..., None, None] + dbx
+        y = jnp.einsum("bhps,bs->bhp", h, Cmat[:, 0])
+        y = y + params["D"][None, :, None] * xs[:, 0]
+        y = y.reshape(Bb, 1, d_in).astype(x.dtype)
+        y = _gated_norm(y, z, params["gate_norm"])
+        out = y @ params["out_proj"]
+        return out, {"conv": conv_state, "ssm": h}
+
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs = xBC[..., :d_in].reshape(Bb, L, H, P)
+    Bmat = xBC[..., d_in:d_in + S]
+    Cmat = xBC[..., d_in + S:]
+
+    # ---- chunked SSD ----------------------------------------------------
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, "sequence length must divide the SSD chunk size"
+    nC = L // Q
+    xs_c = xs.reshape(Bb, nC, Q, H, P)
+    B_c = Bmat.reshape(Bb, nC, Q, S)
+    C_c = Cmat.reshape(Bb, nC, Q, S)
+    dt_c = dt.reshape(Bb, nC, Q, H)
+    la = A[None, None, None, :] * dt_c                  # log decay (B,nC,Q,H)
+    cum = jnp.cumsum(la, axis=2)                        # inclusive
+    # intra-chunk: scores[i,j] = C_i.B_j * exp(cum_i - cum_j) for j<=i.
+    # Mask in LOG space: the j>i branch would overflow exp() and poison
+    # gradients through jnp.where (inf * 0 -> NaN in the backward pass).
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nC,Q,Q,H)
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e30)
+    cb = jnp.einsum("bnis,bnjs->bnij", C_c, B_c)
+    w_ij = cb[..., None] * jnp.exp(diff)
+    dx = dt_c[..., None] * xs_c                         # (B,nC,Q,H,P)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w_ij, dx)
+    # chunk states: S_n = sum_j exp(cum_Q - cum_j) B_j (dt_j x_j)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nC,Q,H)
+    st_c = jnp.einsum("bnjs,bnjh,bnjhp->bnhps", B_c, dec_end, dx)
+    # inter-chunk recurrence over nC
+    a_chunk = jnp.exp(cum[:, :, -1, :])                 # (B,nC,H)
+
+    def scan_f(h, inp):
+        st_n, a_n = inp
+        y_state = h                                      # state entering chunk
+        h = h * a_n[..., None, None] + st_n
+        return h, y_state
+
+    h0 = jnp.zeros((Bb, H, P, S), jnp.float32)
+    _, h_in = jax.lax.scan(scan_f,
+                           h0,
+                           (st_c.transpose(1, 0, 2, 3, 4),
+                            a_chunk.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                # (B,nC,H,P,S)
+    # y_inter[i] = C_i^T exp(cum_i) . h_incoming
+    y_inter = jnp.einsum("bnis,bnih,bnhps->bnihp", C_c, jnp.exp(cum), h_in)
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(Bb, L, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, params["gate_norm"])
+    return shard.constrain(y @ params["out_proj"], "act_embed"), None
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int) -> Dict:
+    d_in, H, P, S = _dims(cfg)
+    conv_ch = d_in + 2 * S
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), cfg.dtype()),
+        "ssm": jnp.zeros((batch, H, P, S), jnp.float32),
+    }
+
+
+def apply_ssm_ref(params: Dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Sequential-recurrence oracle (slow, exact) for tests."""
+    d_in, H, P, S = _dims(cfg)
+    Bb, L, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs = xBC[..., :d_in].reshape(Bb, L, H, P)
+    Bmat = xBC[..., d_in:d_in + S]
+    Cmat = xBC[..., d_in + S:]
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp
+        a = jnp.exp(A[None, :] * dt_t)                   # (B,H)
+        h = h * a[..., None, None] + jnp.einsum(
+            "bhp,bs,bh->bhps", x_t, b_t, dt_t)
+        y = jnp.einsum("bhps,bs->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, S), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (xs.transpose(1, 0, 2, 3),
+                          Bmat.transpose(1, 0, 2),
+                          Cmat.transpose(1, 0, 2),
+                          dt.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3) + params["D"][None, None, :, None] * xs
+    y = y.reshape(Bb, L, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, params["gate_norm"])
+    return y @ params["out_proj"]

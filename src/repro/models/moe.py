@@ -1,0 +1,184 @@
+"""Mixture-of-Experts with the paper's comparison-free machinery inside.
+
+Two places the sort-in-memory technique is first-class here:
+
+* **Routing top-k** (DeepSeek-V2: top-6 of 160; Qwen2-MoE: top-4 of 60) runs
+  on :func:`repro.core.radix_select.topk_values` — iterated digit-plane min
+  search (the multi-level DR strategy), not ``jax.lax.top_k``.  Set
+  ``router_impl='lax'`` in the config for the comparison-based baseline the
+  paper compares against.
+
+* **Dispatch** orders (token, expert) pairs with the comparison-free LSB
+  radix sort (:func:`radix_select.radix_sort_keys`) and scatters into a
+  static (E, C, D) expert-major buffer — the standard capacity-based layout
+  whose expert axis shards over the "model" mesh axis (expert parallelism;
+  GSPMD inserts the all-to-all).
+
+Router weights/gating math run in float32 (standard MoE practice).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import radix_select as rs
+from repro.models import shard
+from repro.models.config import ArchConfig
+from repro.models.layers import _init, apply_mlp, init_mlp
+
+
+def init_moe(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 4)
+    E, ff, d = cfg.n_routed_experts, cfg.d_ff_expert, cfg.d_model
+    p = {
+        "router": _init(ks[0], (d, E), jnp.float32),
+        # routed experts: stacked (E, ...) GLU weights
+        "wi": _init(ks[1], (E, d, 2 * ff), cfg.pdtype()),
+        "wo": _init(ks[2], (E, ff, d), cfg.pdtype()),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[3],
+                               d_ff=cfg.n_shared_experts * ff)
+    return p
+
+
+def route_topk(logits: jnp.ndarray, k: int, impl: str
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(gates, expert_idx): top-k softmax gates over expert logits (T, E)."""
+    if impl == "radix":
+        vals, idx = rs.topk_values(logits, k, r=4)
+    else:
+        vals, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return gates, idx
+
+
+def _capacity(n_tokens: int, k: int, n_experts: int,
+              factor: float = 1.25) -> int:
+    c = int(np.ceil(n_tokens * k / n_experts * factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def apply_moe(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
+              capacity_factor: float = 1.25,
+              dispatch: str = "einsum") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d).  Returns (y, aux_loss).
+
+    ``dispatch='einsum'`` (default): GShard-style one-hot dispatch — every
+    op is an einsum, so GSPMD shards it cleanly (batch groups over the data
+    axes, experts over the model axis; the token exchange lowers to the
+    MoE all-to-all/reduce pattern).  Capacity is per batch row.
+
+    ``dispatch='sort'``: comparison-free radix-sort dispatch (global
+    capacity, deterministic truncation) — great single-device semantics,
+    scatter-based so only used off the production path.
+    """
+    B, T, d = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    logits = (x.astype(jnp.float32) @ params["router"])           # (B, T, E)
+    gates, eidx = route_topk(logits, k, cfg.router_impl)          # (B, T, k)
+
+    # load-balance auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0) / (B * T * k)
+    aux = E * jnp.sum(me * ce)
+
+    if dispatch == "sort":
+        y = _sort_dispatch(params, x, cfg, gates, eidx, capacity_factor)
+    else:
+        y = _einsum_dispatch(params, x, cfg, gates, eidx, capacity_factor)
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(params["shared"], x, cfg)
+    return y, aux
+
+
+def _einsum_dispatch(params, x, cfg, gates, eidx, capacity_factor):
+    B, T, d = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    C = _capacity(T, k, E, capacity_factor)                # per batch row
+    dt = x.dtype
+    oh_e = jax.nn.one_hot(eidx, E, dtype=jnp.float32)      # (B,T,k,E)
+    # slot of each (t, k) assignment within its expert, ordered by (t, k)
+    flat = oh_e.reshape(B, T * k, E)
+    pos = (jnp.cumsum(flat, axis=1) * flat).reshape(B, T, k, E)
+    pos_tk = jnp.sum(pos, axis=-1) - 1.0                   # (B,T,k)
+    keep = (pos_tk < C) & (pos_tk >= 0)
+    oh_c = jax.nn.one_hot(pos_tk.astype(jnp.int32), C,
+                          dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("btke,btkc->btec", oh_e, oh_c).astype(dt)
+    disp = shard.constrain(disp, "act_dispatch")
+    comb = jnp.einsum("btke,btkc,btk->btec", oh_e, oh_c,
+                      gates).astype(dt)
+    comb = shard.constrain(comb, "act_dispatch")
+    # group (= batch row) dim stays on the expert buffers: capacity slots
+    # are per group, so (b, e, c) never collides across rows (GShard)
+    xbuf = jnp.einsum("btec,btd->becd", disp, x)           # (B,E,C,d)
+    xbuf = shard.constrain(xbuf, "act_expert_g")
+    h = jnp.einsum("becd,edf->becf", xbuf, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if cfg.mlp_act == "silu" else jax.nn.gelu(gate)
+    ybuf = jnp.einsum("becf,efd->becd", act * up, params["wo"])
+    ybuf = shard.constrain(ybuf, "act_expert_g")
+    return jnp.einsum("btec,becd->btd", comb, ybuf)
+
+
+def _sort_dispatch(params, x, cfg, gates, eidx, capacity_factor):
+    B, T, d = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    n = B * T
+    xt = x.reshape(n, d)
+    C = _capacity(n, k, E, capacity_factor)
+    flat_e = eidx.reshape(-1)                                     # (n*k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    # order pairs by expert id with the stable LSB radix sort (ties keep
+    # token order, giving deterministic capacity truncation)
+    perm = rs.radix_sort_keys(flat_e.astype(jnp.uint32)[None], r=4)[0]
+    se, st_, sg = flat_e[perm], flat_t[perm], flat_g[perm]
+    # slot within expert = position - first position of that expert
+    pos = jnp.arange(n * k, dtype=jnp.int32)
+    first = jnp.full((E,), n * k, jnp.int32).at[se].min(pos)      # (E,)
+    slot = pos - first[se]
+    keep = slot < C
+    # expert-major buffers (E, C, ...): over-capacity tokens get an
+    # out-of-bounds slot and are dropped by the scatter
+    xbuf = jnp.zeros((E, C, d), x.dtype)
+    xbuf = xbuf.at[se, jnp.where(keep, slot, C)].set(
+        xt[st_].astype(x.dtype), mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", xbuf, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if cfg.mlp_act == "silu" else jax.nn.gelu(gate)
+    ybuf = jnp.einsum("ecf,efd->ecd", act * up, params["wo"])
+
+    ytok = ybuf[se, jnp.clip(slot, 0, C - 1)]                     # (n*k, d)
+    contrib = jnp.where(keep[:, None], ytok * sg[:, None].astype(x.dtype), 0.0)
+    y = jnp.zeros((n, d), x.dtype).at[st_].add(contrib)
+    return y.reshape(B, T, d)
+
+
+def apply_moe_dense_ref(params: Dict, x: jnp.ndarray, cfg: ArchConfig
+                        ) -> jnp.ndarray:
+    """Oracle: compute every expert densely and combine by gates — no
+    capacity drops.  Used by tests on tiny configs."""
+    B, T, d = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    gates, eidx = route_topk(logits, k, cfg.router_impl)
+    h = jnp.einsum("nd,edf->enf", xt, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if cfg.mlp_act == "silu" else jax.nn.gelu(gate)
+    ye = jnp.einsum("enf,efd->end", act * up, params["wo"])      # (E, n, d)
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)          # (n, k, E)
+    w = jnp.einsum("nke,nk->en", onehot, gates).astype(x.dtype)
+    y = jnp.einsum("end,en->nd", ye, w)
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(params["shared"], xt, cfg)
+    return y.reshape(B, T, d)

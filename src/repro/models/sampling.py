@@ -1,0 +1,66 @@
+"""Decode loop + comparison-free top-k sampling.
+
+Top-k logit filtering uses the histogram radix-select mask
+(:func:`repro.core.radix_select.topk_logits_mask`) — the paper's digit-read
+selection applied at the vocab scale — instead of a comparison sort.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import radix_select as rs
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+def sample_logits(logits: jnp.ndarray, key, top_k: int = 0,
+                  temperature: float = 1.0) -> jnp.ndarray:
+    """logits: (B, V) -> token ids (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k:
+        mask = rs.topk_logits_mask(lg, top_k)
+        lg = jnp.where(mask, lg, -1e30)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ArchConfig, prompt: jnp.ndarray, max_new: int,
+             key, top_k: int = 0, temperature: float = 1.0,
+             frontend: Optional[jnp.ndarray] = None,
+             prune_masks: Optional[Dict] = None) -> jnp.ndarray:
+    """Greedy/top-k generation.  prompt: (B, T0).  Returns (B, T0+max_new)."""
+    B, T0 = prompt.shape
+    max_len = T0 + max_new
+    caches = T.init_cache(cfg, B, max_len)
+    # prefill one token at a time keeps this reference implementation simple
+    # and cache-exact; the serving benchmark uses batched prefill.
+    logits, caches = _prefill(params, cfg, prompt, caches, frontend,
+                              prune_masks)
+    toks = [prompt]
+    last = prompt[:, -1:]
+    pos = jnp.full((B,), T0 - 1, jnp.int32)
+    out_tok = sample_logits(logits[:, -1, :], key, top_k, temperature)[:, None]
+    toks.append(out_tok)
+    for i in range(max_new - 1):
+        key, sk = jax.random.split(key)
+        pos = pos + 1
+        logits, caches = T.decode_step(params, cfg, out_tok, pos, caches,
+                                       frontend, prune_masks)
+        out_tok = sample_logits(logits[:, -1, :], sk, top_k, temperature)[:, None]
+        toks.append(out_tok)
+    return jnp.concatenate(toks, axis=1)
+
+
+def _prefill(params, cfg, prompt, caches, frontend, prune_masks):
+    B, T0 = prompt.shape
+    logits = None
+    for t in range(T0):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = T.decode_step(params, cfg, prompt[:, t:t + 1], pos,
+                                       caches, frontend, prune_masks)
+    return logits, caches

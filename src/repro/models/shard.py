@@ -1,0 +1,126 @@
+"""Logical activation sharding constraints.
+
+``constrain(x, name)`` applies ``with_sharding_constraint`` using the rule
+table below when called inside a mesh context (jit with NamedShardings);
+otherwise it is a no-op, so smoke tests on one CPU device run unannotated.
+
+Rules map logical names to mesh axes.  Data-parallel axes are
+("pod", "data") when the pod axis exists; tensor-parallel is "model".
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# logical name -> CANDIDATE (spec builder, strict) pairs given
+# (data_axes, model_axis).  strict=True candidates are skipped when a
+# sharded dim does not divide evenly (used where layout compatibility
+# matters, e.g. decode-cache scatters); strict=False lets GSPMD shard
+# unevenly with padding — measured BETTER than falling back to a
+# different axis for attention scores (see EXPERIMENTS.md §Perf C1).
+_RULES = {
+    # (B, T, H, hd)
+    "act_heads":    [(lambda dp, mp: P(dp, None, mp, None), False)],
+    # K/V heads feed the decode-cache scatter: stay layout-exact, fall
+    # back to sharding head_dim when KV heads don't divide (§Perf A0)
+    "act_kv_heads": [(lambda dp, mp: P(dp, None, mp, None), True),
+                     (lambda dp, mp: P(dp, None, None, mp), True),
+                     (lambda dp, mp: P(dp, None, None, None), False)],
+    # (B, H, T, S) attention scores/probs
+    "act_scores":   [(lambda dp, mp: P(dp, mp, None, None), False)],
+    # (B, T, d)
+    "act_embed":    [(lambda dp, mp: P(dp, None, None), False)],
+    # (B, T, ff)
+    "act_ff":       [(lambda dp, mp: P(dp, None, mp), False)],
+    # (B, T, V)
+    "act_vocab":    [(lambda dp, mp: P(dp, None, mp), False)],
+    # (B, T) tokens
+    "act_tokens":   [(lambda dp, mp: P(dp, None), False)],
+    # MoE: (E, C, d) expert-major dispatch buffers
+    "act_expert":   [(lambda dp, mp: P(mp, None, None), True),
+                     (lambda dp, mp: P(None, None, mp), False)],
+    # MoE: (B, T, E, C) one-hot dispatch/combine tensors
+    "act_dispatch": [(lambda dp, mp: P(dp, None, mp, None), True),
+                     (lambda dp, mp: P(dp, None, None, mp), False)],
+    # MoE: (B, E, C, d) grouped expert buffers
+    "act_expert_g": [(lambda dp, mp: P(dp, mp, None, None), True),
+                     (lambda dp, mp: P(dp, None, None, mp), False)],
+    # SSD state (B, H, P, S)
+    "act_ssm_state": [(lambda dp, mp: P(dp, mp, None, None), False)],
+}
+
+
+def set_mesh_axes(data_axes: Optional[Tuple[str, ...]],
+                  model_axis: Optional[str],
+                  axis_sizes: Optional[Dict[str, int]] = None) -> None:
+    """Enable activation constraints (called by the launcher inside the mesh
+    context).  ``axis_sizes`` ({axis: size}) enables the divisibility-aware
+    rule fallback.  Pass (None, None) to disable."""
+    _state.data_axes = data_axes
+    _state.model_axis = model_axis
+    _state.axis_sizes = axis_sizes
+
+
+def get_mesh_axes():
+    return (getattr(_state, "data_axes", None),
+            getattr(_state, "model_axis", None))
+
+
+def get_axis_sizes() -> Optional[Dict[str, int]]:
+    return getattr(_state, "axis_sizes", None)
+
+
+class mesh_axes:
+    """Context manager used by launchers around traced model calls."""
+
+    def __init__(self, data_axes, model_axis, axis_sizes=None):
+        if axis_sizes is not None and not isinstance(axis_sizes, dict):
+            axis_sizes = dict(axis_sizes.shape)      # accept a Mesh
+        self.axes = (data_axes, model_axis, axis_sizes)
+
+    def __enter__(self):
+        self.prev = get_mesh_axes() + (get_axis_sizes(),)
+        set_mesh_axes(*self.axes)
+        return self
+
+    def __exit__(self, *exc):
+        set_mesh_axes(*self.prev)
+        return False
+
+
+def _axis_size(sizes: Dict[str, int], axis) -> int:
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _divisible(x, spec: P, sizes: Dict[str, int]) -> bool:
+    for dim, ax in zip(x.shape, spec):
+        if ax is not None and dim % _axis_size(sizes, ax) != 0:
+            return False
+    return True
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    dp, mp = get_mesh_axes()
+    if dp is None and mp is None:
+        return x
+    sizes = get_axis_sizes()
+    for builder, strict in _RULES[name]:
+        spec = builder(dp, mp)
+        # drop axes the array doesn't have (e.g. 2D tokens)
+        spec = P(*spec[: x.ndim])
+        if strict and sizes is not None and not _divisible(x, spec, sizes):
+            continue
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            return x
+    return x

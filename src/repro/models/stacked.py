@@ -1,0 +1,357 @@
+"""Scan-over-layers ("stacked") forward — the production path.
+
+Per-layer Python loops (transformer.py) produce O(n_layers) HLO, which is
+untenable to compile for 60-100-layer models partitioned over 512 devices.
+Here identical consecutive layers hold their parameters STACKED along a
+leading axis and execute under ``lax.scan``; periodic patterns (a VLM
+fusion layer every 10, zamba2's shared attention every 6) become a
+two-level scan (outer over repetitions, inner over the period's runs), so
+the compiled program contains one body per distinct layer *structure*
+regardless of depth.
+
+Layer grouping:
+
+  deepseek-v2 : [mla+dense x1] + [mla+moe x59]          -> run + run(scan)
+  qwen3 &c.   : [attn x N]                              -> one scan
+  llama-vision: 10 x ([attn x9] + [attn+xattn x1])      -> periodic
+  zamba2      : 9 x ([ssm x5] + [shared-attn x1])       -> periodic
+  musicgen    : 4 x ([attn x11] + [attn+xattn x1])      -> periodic
+
+``from_layerwise`` converts transformer.py params into stacked layout; the
+equivalence test pins both paths to identical logits.  Gradient
+checkpointing (remat) wraps the scan bodies: "full" saves nothing,
+"dots" saves matmul outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.config import ATTN, MLA, SSM, ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Sig:
+    kind: str
+    moe: bool = False
+    xattn: bool = False
+    shared: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    sig: Sig
+    count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Periodic:
+    reps: int
+    inner: Tuple[Run, ...]
+
+
+def layer_sig(cfg: ArchConfig, i: int) -> Sig:
+    kinds = T._layer_kinds(cfg)
+    kind = kinds[i]
+    shared = bool(cfg.hybrid_every) and kind == ATTN
+    return Sig(kind=kind,
+               moe=T._is_moe_layer(cfg, i, kind),
+               xattn=T._has_xattn(cfg, i),
+               shared=shared)
+
+
+def _rle(sigs: Sequence[Sig]) -> List[Run]:
+    runs: List[Run] = []
+    for s in sigs:
+        if runs and runs[-1].sig == s:
+            runs[-1] = Run(s, runs[-1].count + 1)
+        else:
+            runs.append(Run(s, 1))
+    return runs
+
+
+def segments(cfg: ArchConfig) -> List:
+    sigs = [layer_sig(cfg, i) for i in range(cfg.n_layers)]
+    p = cfg.xattn_every or cfg.hybrid_every
+    if p and cfg.n_layers % p == 0 and cfg.n_layers // p > 1:
+        period = sigs[:p]
+        if all(sigs[i] == period[i % p] for i in range(cfg.n_layers)):
+            return [Periodic(cfg.n_layers // p, tuple(_rle(period)))]
+    return list(_rle(sigs))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, sig: Sig, key) -> Dict:
+    bk = jax.random.split(key, 6)
+    blk: Dict = {"norm1": L.init_norm(cfg, bk[0])}
+    if sig.kind == SSM:
+        blk["ssm"] = M.init_ssm(cfg, bk[1])
+    elif not sig.shared:
+        blk["attn"] = (L.init_mla(cfg, bk[1]) if sig.kind == MLA
+                       else L.init_attn(cfg, bk[1]))
+        blk["norm2"] = L.init_norm(cfg, bk[2])
+        if sig.moe:
+            blk["moe"] = MOE.init_moe(cfg, bk[3])
+        else:
+            blk["mlp"] = L.init_mlp(cfg, bk[3])
+    if sig.xattn:
+        blk["xattn"] = L.init_xattn(cfg, bk[4])
+        blk["xnorm"] = L.init_norm(cfg, bk[5])
+    return blk
+
+
+def init_params(cfg: ArchConfig, key) -> Dict:
+    segs = segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: Dict = {"embed": L.init_embed(cfg, keys[-1]),
+                    "final_norm": L.init_norm(cfg, keys[-2])}
+    if cfg.hybrid_every:
+        sk = jax.random.split(keys[-3], 4)
+        params["shared_attn"] = {"attn": L.init_attn(cfg, sk[0]),
+                                 "norm2": L.init_norm(cfg, sk[1]),
+                                 "mlp": L.init_mlp(cfg, sk[2])}
+    seg_params = []
+    for seg, k in zip(segs, keys[:len(segs)]):
+        if isinstance(seg, Run):
+            if seg.count == 1:
+                seg_params.append(_init_block(cfg, seg.sig, k))
+            else:
+                ks = jax.random.split(k, seg.count)
+                seg_params.append(jax.vmap(
+                    lambda kk, s=seg.sig: _init_block(cfg, s, kk))(ks))
+        else:  # Periodic
+            inner_params = []
+            for j, run in enumerate(seg.inner):
+                kj = jax.random.fold_in(k, j)
+                if run.count == 1:
+                    ks = jax.random.split(kj, seg.reps)
+                    inner_params.append(jax.vmap(
+                        lambda kk, s=run.sig: _init_block(cfg, s, kk))(ks))
+                else:
+                    ks = jax.random.split(kj, seg.reps * run.count).reshape(
+                        seg.reps, run.count, 2)
+                    inner_params.append(jax.vmap(jax.vmap(
+                        lambda kk, s=run.sig: _init_block(cfg, s, kk)))(ks))
+            seg_params.append({"inner": inner_params})
+    params["segments"] = seg_params
+    return params
+
+
+def from_layerwise(cfg: ArchConfig, lw: Dict) -> Dict:
+    """Convert transformer.init_params layout to stacked layout."""
+    segs = segments(cfg)
+    blocks = lw["blocks"]
+    out = {"embed": lw["embed"], "final_norm": lw["final_norm"]}
+    if "shared_attn" in lw:
+        out["shared_attn"] = lw["shared_attn"]
+    idx = 0
+    seg_params = []
+    stack = lambda blks: jax.tree.map(lambda *xs: jnp.stack(xs), *blks)
+    for seg in segs:
+        if isinstance(seg, Run):
+            blks = blocks[idx: idx + seg.count]
+            idx += seg.count
+            seg_params.append(blks[0] if seg.count == 1 else stack(blks))
+        else:
+            p = sum(r.count for r in seg.inner)
+            inner_lists: List[List] = [[] for _ in seg.inner]
+            for rep in range(seg.reps):
+                o = idx + rep * p
+                for j, run in enumerate(seg.inner):
+                    blks = blocks[o: o + run.count]
+                    o += run.count
+                    inner_lists[j].append(
+                        blks[0] if run.count == 1 else stack(blks))
+            idx += seg.reps * p
+            seg_params.append(
+                {"inner": [stack(lst) for lst in inner_lists]})
+    out["segments"] = seg_params
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)          # "full": save nothing
+
+
+def _scan_run(shared, run: Run, blk_stacked, cfg, x, aux, positions,
+              frontend, cache_stacked, remat: str, want_cache: bool,
+              unroll: bool = False):
+    def body(carry, xs):
+        xc, auxc = carry
+        blk, cache = xs
+        y, nc, a = T.apply_block(shared, blk, run.sig.kind, cfg, xc,
+                                 positions, frontend,
+                                 cache if want_cache else None)
+        nc = nc if nc is not None else 0
+        return (y, auxc + a), nc
+
+    xs = (blk_stacked, cache_stacked)
+    if unroll:
+        # Python-unrolled execution: identical math, one HLO body per
+        # layer — used by the roofline dry-run because XLA cost_analysis
+        # counts a while/scan body ONCE regardless of trip count.
+        fb = _remat(body, remat)
+        ncs = []
+        carry = (x, aux)
+        for i in range(run.count):
+            sl = jax.tree.map(lambda a_: a_[i], xs)
+            carry, nc = fb(carry, sl)
+            ncs.append(nc)
+        (x, aux) = carry
+        new_caches = jax.tree.map(lambda *ys: jnp.stack(ys), *ncs)
+        return x, aux, new_caches
+    (x, aux), new_caches = jax.lax.scan(_remat(body, remat), (x, aux), xs)
+    return x, aux, new_caches
+
+
+def forward(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+            frontend: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            caches: Optional[List] = None,
+            remat: str = "none", unroll: bool = False):
+    B, Tn = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Tn, dtype=jnp.int32), (B, Tn))
+    x = L.embed_tokens(params["embed"], tokens)
+    segs = segments(cfg)
+    shared = params.get("shared_attn")
+    aux = jnp.zeros((), jnp.float32)
+    want_cache = caches is not None
+    if caches is None:
+        caches = [_null_cache_for(cfg, seg) for seg in segs]
+    new_caches = []
+    for seg, sp, cache in zip(segs, params["segments"], caches):
+        if isinstance(seg, Run):
+            if seg.count == 1:
+                x, nc, a = T.apply_block(shared, sp, seg.sig.kind, cfg, x,
+                                         positions, frontend,
+                                         cache if want_cache else None)
+                aux = aux + a
+                new_caches.append(nc)
+            else:
+                x, aux, nc = _scan_run(shared, seg, sp, cfg, x, aux,
+                                       positions, frontend, cache, remat,
+                                       want_cache, unroll)
+                new_caches.append(nc)
+        else:
+            def rep_body(carry, xs, seg=seg):
+                xc, auxc = carry
+                inner_params, inner_caches = xs
+                ncs = []
+                for run, ip, ic in zip(seg.inner, inner_params, inner_caches):
+                    if run.count == 1:
+                        xc, nc, a = T.apply_block(
+                            shared, ip, run.sig.kind, cfg, xc, positions,
+                            frontend, ic if want_cache else None)
+                        auxc = auxc + a
+                        ncs.append(nc if nc is not None else 0)
+                    else:
+                        xc, auxc, nc = _scan_run(
+                            shared, run, ip, cfg, xc, auxc, positions,
+                            frontend, ic, "none", want_cache, unroll)
+                        ncs.append(nc)
+                return (xc, auxc), ncs
+
+            if unroll:
+                fb = _remat(rep_body, remat)
+                carry, ncs_all = (x, aux), []
+                for r in range(seg.reps):
+                    sl = jax.tree.map(lambda a_: a_[r], (sp["inner"], cache))
+                    carry, ncs = fb(carry, sl)
+                    ncs_all.append(ncs)
+                (x, aux) = carry
+                new_caches.append(jax.tree.map(
+                    lambda *ys: jnp.stack(ys), *ncs_all))
+            else:
+                body = _remat(rep_body, remat)
+                (x, aux), ncs = jax.lax.scan(
+                    body, (x, aux), (sp["inner"], cache))
+                new_caches.append(ncs)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x)
+    return logits, (new_caches if want_cache else None), aux
+
+
+def _null_cache_for(cfg: ArchConfig, seg):
+    """Zero-size placeholders so scan xs structure matches (no caching)."""
+    if isinstance(seg, Run):
+        return jnp.zeros((seg.count,) if seg.count > 1 else (), jnp.int32)
+    return [jnp.zeros((seg.reps, run.count) if run.count > 1
+                      else (seg.reps,), jnp.int32) for run in seg.inner]
+
+
+def loss_fn(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, frontend: Optional[jnp.ndarray] = None,
+            aux_weight: float = 0.01, remat: str = "none",
+            unroll: bool = False):
+    logits, _, aux = forward(params, cfg, tokens, frontend, remat=remat,
+                             unroll=unroll)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving (stacked caches)
+# ---------------------------------------------------------------------------
+
+
+def _cache_for_sig(cfg: ArchConfig, sig: Sig, batch: int, max_len: int):
+    if sig.kind == SSM:
+        return M.init_ssm_cache(cfg, batch)
+    if sig.kind == MLA:
+        return L.init_mla_cache(cfg, batch, max_len)
+    return L.init_attn_cache(cfg, batch, max_len)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> List:
+    segs = segments(cfg)
+    caches = []
+    for seg in segs:
+        if isinstance(seg, Run):
+            c = _cache_for_sig(cfg, seg.sig, batch, max_len)
+            if seg.count > 1:
+                c = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.count,) + x.shape), c)
+            caches.append(c)
+        else:
+            inner = []
+            for run in seg.inner:
+                c = _cache_for_sig(cfg, run.sig, batch, max_len)
+                lead = (seg.reps, run.count) if run.count > 1 else (seg.reps,)
+                inner.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, lead + x.shape), c))
+            caches.append(inner)
+    return caches
+
+
+def decode_step(params: Dict, cfg: ArchConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, caches: List,
+                frontend: Optional[jnp.ndarray] = None):
+    positions = pos[:, None].astype(jnp.int32)
+    logits, new_caches, _ = forward(params, cfg, token, frontend=frontend,
+                                    positions=positions, caches=caches)
+    return logits, new_caches

@@ -1,0 +1,197 @@
+"""Backbone assembly for all assigned architectures.
+
+A model is a pytree of params + pure functions:
+
+* ``init_params(cfg, key)``
+* ``forward(params, cfg, tokens, frontend=None)`` -> logits (train/prefill)
+* ``loss_fn(params, cfg, tokens, labels, ...)`` -> scalar + metrics
+* ``init_cache(cfg, batch, max_len)`` / ``decode_step(...)`` -> serving path
+
+Layer kinds per config: attn (GQA) / mla (DeepSeek-V2) / ssm (Mamba2 SSD) /
+xattn cadence for VLM.  Zamba2-style hybrids reuse ONE shared attention
+block every ``hybrid_every`` layers (the paper['s] "shared attn blocks").
+MoE layers replace the MLP from ``moe_layer_start`` on when ``cfg.moe``.
+In-situ pruning (the paper technique, §3.2) hooks into the serve path via
+``prune_masks`` — per-layer keep-masks produced by repro.pruning.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import shard
+from repro.models.config import ATTN, MLA, SSM, XATTN, ArchConfig
+
+
+def _layer_kinds(cfg: ArchConfig) -> List[str]:
+    kinds = cfg.layers()
+    if cfg.hybrid_every:
+        # zamba2: every Nth layer position gets the shared attention block
+        kinds = [ATTN if (i + 1) % cfg.hybrid_every == 0 else SSM
+                 for i in range(cfg.n_layers)]
+    return kinds
+
+
+def _is_moe_layer(cfg: ArchConfig, i: int, kind: str) -> bool:
+    return bool(cfg.moe and kind in (ATTN, MLA) and i >= cfg.moe_layer_start)
+
+
+def _has_xattn(cfg: ArchConfig, i: int) -> bool:
+    return bool(cfg.xattn_every and (i + 1) % cfg.xattn_every == 0)
+
+
+def init_params(cfg: ArchConfig, key) -> Dict:
+    kinds = _layer_kinds(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: Dict = {"embed": L.init_embed(cfg, keys[-1]),
+                    "final_norm": L.init_norm(cfg, keys[-2])}
+    shared_attn: Optional[Dict] = None
+    blocks = []
+    for i, kind in enumerate(kinds):
+        bk = jax.random.split(keys[i], 6)
+        blk: Dict = {"norm1": L.init_norm(cfg, bk[0])}
+        if kind == SSM:
+            blk["ssm"] = M.init_ssm(cfg, bk[1])
+        else:
+            if cfg.hybrid_every and kind == ATTN:
+                if shared_attn is None:
+                    shared_attn = {"attn": L.init_attn(cfg, bk[1]),
+                                   "norm2": L.init_norm(cfg, bk[2]),
+                                   "mlp": L.init_mlp(cfg, bk[3])}
+                # shared block: no per-layer attn/mlp params
+            elif kind == MLA:
+                blk["attn"] = L.init_mla(cfg, bk[1])
+            else:
+                blk["attn"] = L.init_attn(cfg, bk[1])
+            if not (cfg.hybrid_every and kind == ATTN):
+                blk["norm2"] = L.init_norm(cfg, bk[2])
+                if _is_moe_layer(cfg, i, kind):
+                    blk["moe"] = MOE.init_moe(cfg, bk[3])
+                else:
+                    blk["mlp"] = L.init_mlp(cfg, bk[3])
+        if _has_xattn(cfg, i):
+            blk["xattn"] = L.init_xattn(cfg, bk[4])
+            blk["xnorm"] = L.init_norm(cfg, bk[5])
+        blocks.append(blk)
+    params["blocks"] = blocks
+    if shared_attn is not None:
+        params["shared_attn"] = shared_attn
+    return params
+
+
+def apply_block(shared_attn: Optional[Dict], blk: Dict, kind: str,
+                cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray,
+                frontend: Optional[jnp.ndarray],
+                cache: Optional[Dict],
+                prune_mask: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """One block.  Structure is read off the param dict (static under jit):
+    'ssm'/'attn'/'moe'/'mlp'/'xattn' membership decides the path; blocks
+    without their own attention use ``shared_attn`` (zamba2)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if kind == SSM and "ssm" in blk:
+        h = L.apply_norm(blk["norm1"], x, cfg)
+        y, new_cache = M.apply_ssm(blk["ssm"], h, cfg, cache)
+        x = x + y
+    else:
+        use_shared = "attn" not in blk
+        ablk = shared_attn if use_shared else blk
+        h = L.apply_norm(blk["norm1"], x, cfg)
+        if kind == MLA:
+            y, new_cache = L.apply_mla(ablk["attn"], h, cfg, positions, cache)
+        else:
+            y, new_cache = L.apply_attn(ablk["attn"], h, cfg, positions, cache)
+        x = x + y
+        h = L.apply_norm(ablk["norm2"], x, cfg)
+        if "moe" in blk:
+            y, aux = MOE.apply_moe(blk["moe"], h, cfg)
+        else:
+            mlp = ablk.get("mlp", blk.get("mlp"))
+            if prune_mask is not None:
+                # in-situ pruning: mask the MLP input lanes whose weights
+                # TNS located as smallest (paper Algorithm S2)
+                h = h * prune_mask.astype(h.dtype)[None, None, :]
+            y = L.apply_mlp(mlp, h, cfg)
+        x = x + y
+    if "xattn" in blk and frontend is not None:
+        h = L.apply_norm(blk["xnorm"], x, cfg)
+        x = x + L.apply_xattn(blk["xattn"], h, frontend, cfg)
+    return x, new_cache, aux
+
+
+def forward(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+            frontend: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            caches: Optional[List] = None,
+            prune_masks: Optional[Dict] = None):
+    """tokens: (B, T) int32.  Returns (logits, new_caches, aux_losses)."""
+    B, T = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = L.embed_tokens(params["embed"], tokens)
+    kinds = _layer_kinds(cfg)
+    new_caches = [] if caches is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (blk, kind) in enumerate(zip(params["blocks"], kinds)):
+        c = caches[i] if caches is not None else None
+        pm = prune_masks.get(f"mlp_{i}") if prune_masks else None
+        x, nc, aux = apply_block(params.get("shared_attn"), blk, kind, cfg,
+                                 x, positions, frontend, c, pm)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches.append(nc)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x)
+    return logits, new_caches, aux_total
+
+
+def loss_fn(params: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, frontend: Optional[jnp.ndarray] = None,
+            aux_weight: float = 0.01):
+    logits, _, aux = forward(params, cfg, tokens, frontend)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> List:
+    kinds = _layer_kinds(cfg)
+    caches = []
+    for kind in kinds:
+        if kind == SSM:
+            caches.append(M.init_ssm_cache(cfg, batch))
+        elif kind == MLA:
+            caches.append(L.init_mla_cache(cfg, batch, max_len))
+        else:
+            caches.append(L.init_attn_cache(cfg, batch, max_len))
+    return caches
+
+
+def decode_step(params: Dict, cfg: ArchConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, caches: List,
+                frontend: Optional[jnp.ndarray] = None,
+                prune_masks: Optional[Dict] = None):
+    """One serving step: token (B,1) at positions pos (B,).  Returns
+    (logits (B,1,V), new caches)."""
+    positions = pos[:, None].astype(jnp.int32)
+    logits, new_caches, _ = forward(params, cfg, token, frontend=frontend,
+                                    positions=positions, caches=caches,
+                                    prune_masks=prune_masks)
+    return logits, new_caches
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

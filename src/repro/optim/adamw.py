@@ -1,0 +1,108 @@
+"""AdamW + global-norm clipping + int8 gradient compression, pure JAX.
+
+Optimizer state is a pytree {m, v, count}; ``m``/``v`` are float32
+regardless of param dtype (mixed-precision training).  The sharding layer
+shards m/v like the params (ZeRO-style: fully sharded over data x model).
+
+Gradient compression (``compress=True``) applies symmetric per-tensor int8
+quantization with error feedback (the residual is carried in the optimizer
+state).  On a real multi-pod deployment the quantize/dequantize pair wraps
+the cross-pod reduce-scatter (8x less ICI/DCN traffic); numerically the
+jit-visible computation is identical, which is what the tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    compress: bool = False
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    err: Optional[dict]       # error-feedback residual (compression)
+    count: jnp.ndarray
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return OptState(m=zeros(params), v=zeros(params),
+                    err=zeros(params) if cfg.compress else None,
+                    count=jnp.zeros((), jnp.int32))
+
+
+def _schedule(cfg: AdamWConfig, count):
+    warm = jnp.minimum(1.0, (count + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def update(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    err = state.err
+    if cfg.compress:
+        # error-feedback int8: compress (grad + residual), keep the rest
+        def comp(g, e):
+            t = g + e
+            q, s = quantize_int8(t)
+            deq = dequantize_int8(q, s)
+            return deq, t - deq
+        pairs = jax.tree.map(comp, grads, state.err)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    lr = _schedule(cfg, state.count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state.v, grads)
+
+    def step(p, m, v):
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree.map(step, params, new_m, new_v)
+    return new_params, OptState(new_m, new_v, err, count), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,109 @@
+"""In-situ pruning with run-time tunable sparsity (paper §3.2, Alg. S2).
+
+The paper stores layer weights in the CIM array, uses TNS to locate the p%
+smallest |weights|, and masks the corresponding *inputs* before the MVM.
+For a weight matrix, masking input lane i is identical to zeroing row
+W[i, :]; we score each input lane by its largest |weight| (so a masked
+lane only ever removes weights that are all among the smallest) and select
+the p% smallest lanes with the comparison-free radix machinery — the same
+digit-read selection the hardware performs, at tensor scale.
+
+Two paths:
+
+* ``prune_params`` — throughput mode: radix threshold-select per layer over
+  the stacked parameter pytree (used by the serving driver; ``rate`` may be
+  a traced scalar — run-time tunable).
+* ``tns_prune`` — cycle-faithful mode: quantize weights to 8-bit
+  sign-magnitude (like the paper's PointNet++ demo), run the TNS engine
+  with ``stop_after = p%% * N``, and report located indices + DR counts
+  (feeds the Fig. 6f benchmark and the BER study).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as bp
+from repro.core import device_model as dm
+from repro.core import radix_select as rs
+from repro.core import tns as jt
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# Throughput mode (serving path)
+# ---------------------------------------------------------------------------
+
+
+def lane_keep_mask(wi: jnp.ndarray, rate) -> jnp.ndarray:
+    """wi: (..., d_in, d_out).  Returns (..., d_in) keep mask with the
+    ceil(rate*d_in) smallest-magnitude lanes dropped."""
+    scores = jnp.max(jnp.abs(wi.astype(jnp.float32)), axis=-1)
+    d = wi.shape[-2]
+    k = jnp.round(jnp.asarray(rate) * d).astype(jnp.int32)
+    flat = scores.reshape(-1, d)
+    pruned = jax.vmap(lambda s: rs.prune_smallest_mask(s, k))(flat)
+    return ~pruned.reshape(scores.shape)
+
+
+def prune_params(params: Dict, cfg: ArchConfig, rate) -> Tuple[Dict, Dict]:
+    """Zero the TNS-located smallest input lanes of every MLP ``wi`` in a
+    stacked (or layerwise) param tree.  Returns (new_params, stats)."""
+    def visit(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        # dense MLPs and MoE *shared* experts are pruned; routed expert
+        # banks (moe/wi with a leading E axis) are already sparse by routing
+        if len(keys) >= 2 and keys[-1] == "wi" and keys[-2] in ("mlp",
+                                                                "shared"):
+            keep = lane_keep_mask(leaf, rate)
+            return (leaf * keep[..., None].astype(leaf.dtype)), keep
+        return leaf, None
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    new_leaves, masks = [], {}
+    pruned_w = kept_w = 0
+    for path, leaf in flat[0]:
+        new, keep = visit(path, leaf)
+        new_leaves.append(new)
+        if keep is not None:
+            masks[jax.tree_util.keystr(path)] = keep
+            total = np.prod(leaf.shape)
+            frac = float(jnp.mean(~keep))
+            pruned_w += frac * total
+            kept_w += (1 - frac) * total
+    stats = {"masks": masks,
+             "weight_sparsity": pruned_w / max(pruned_w + kept_w, 1)}
+    return jax.tree_util.tree_unflatten(flat[1], new_leaves), stats
+
+
+# ---------------------------------------------------------------------------
+# Cycle-faithful mode (hardware benchmark, Fig. 6f)
+# ---------------------------------------------------------------------------
+
+
+def quantize_8bit_signmag(w: np.ndarray) -> np.ndarray:
+    """Paper: 'we quantify the weights into 8-bit sign-and-magnitude
+    numbers' — symmetric scale to +-127."""
+    scale = np.max(np.abs(w)) / 127.0 if np.max(np.abs(w)) > 0 else 1.0
+    return np.clip(np.round(w / scale), -127, 127).astype(np.int64)
+
+
+def tns_prune(weights: np.ndarray, rate: float, k: int = 2,
+              ber: float = 0.0, seed: int = 0):
+    """Locate the p% smallest |weights| with the cycle-faithful TNS engine
+    (sorting |w| as unsigned magnitudes, ascending), optionally under
+    device bit errors.  Returns (indices, cycles, drs)."""
+    q = quantize_8bit_signmag(np.asarray(weights).reshape(-1))
+    mag = np.abs(q)
+    n = mag.shape[0]
+    m = int(round(rate * n))
+    planes = bp.to_bitplanes(mag, 8, bp.UNSIGNED)
+    if ber > 0:
+        planes = dm.apply_ber(planes, ber, seed=seed)
+    out = jt.tns_sort_planes(jnp.asarray(planes.astype(np.int32)), None,
+                             k=k, fmt=bp.UNSIGNED, stop_after=m)
+    idx = np.asarray(out.perm)[:m]
+    return idx, int(out.cycles), int(out.drs)

@@ -1,0 +1,89 @@
+"""Application tests: Dijkstra on the SIM engine (paper §3.1) and in-situ
+pruning with run-time tunable sparsity (§3.2)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.graph import dijkstra as dj
+from repro.models import stacked
+from repro.pruning import insitu
+
+
+class TestDijkstra:
+    def test_graph_shape_matches_paper(self):
+        adj = dj.adjacency()
+        # 16 stations, each with 3-4 neighbors, 54 stored distances
+        assert len(dj.STATIONS) == 16
+        degs = [len(v) for v in adj.values()]
+        assert all(3 <= d <= 4 for d in degs)
+        assert sum(degs) == 54
+
+    def test_tns_path_matches_reference(self):
+        for src, dst in [(0, 13), (3, 15), (5, 12), (15, 0)]:
+            res = dj.shortest_path(src, dst, k=2, engine="oracle",
+                                   full_sort_stats=False)
+            ref_d, ref_path = dj.reference_shortest_path(src, dst)
+            assert res.path == ref_path, (src, dst)
+
+    def test_fig5e_drs_per_number_about_3(self):
+        # Fig. 5e: ~3 DRs to sort a number on average (fp16, k=2)
+        res = dj.shortest_path(0, 13, k=2, engine="oracle")
+        assert 2.0 <= res.fig5e_drs_per_number <= 4.0, \
+            res.fig5e_drs_per_number
+
+    def test_jax_engine_agrees_with_oracle(self):
+        r1 = dj.shortest_path(0, 13, k=2, engine="oracle",
+                              full_sort_stats=False)
+        r2 = dj.shortest_path(0, 13, k=2, engine="jax",
+                              full_sort_stats=False)
+        assert r1.path == r2.path
+        assert r1.total_drs == r2.total_drs
+
+
+class TestInsituPruning:
+    def test_tns_prune_finds_smallest(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal(32)
+        idx, cycles, drs = insitu.tns_prune(w, rate=0.3, k=2)
+        assert len(idx) == 10          # 30% of 32 rounded
+        got = np.sort(np.abs(insitu.quantize_8bit_signmag(w))[idx])
+        ref = np.sort(np.abs(insitu.quantize_8bit_signmag(w)))[:10]
+        np.testing.assert_array_equal(got, ref)
+        assert cycles > 0
+
+    def test_prune_params_runtime_tunable(self):
+        cfg = configs.get_config("olmo_1b").reduced()
+        params = stacked.init_params(cfg, jax.random.PRNGKey(0))
+        for rate in [0.0, 0.3, 0.7]:
+            newp, stats = insitu.prune_params(params, cfg, rate)
+            # lanes pruned ~= rate (weight sparsity tracks lane sparsity)
+            assert stats["weight_sparsity"] == pytest.approx(rate, abs=0.05)
+
+    def test_pruned_model_still_runs_and_degrades_gracefully(self):
+        cfg = configs.get_config("olmo_1b").reduced()
+        params = stacked.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab, (2, 16)), jnp.int32)
+        base, _, _ = stacked.forward(params, cfg, toks)
+        p30, _ = insitu.prune_params(params, cfg, 0.3)
+        out30, _, _ = stacked.forward(p30, cfg, toks)
+        assert bool(jnp.all(jnp.isfinite(out30)))
+        # 30% pruning perturbs but does not destroy the logits
+        cos = jnp.sum(base * out30) / (
+            jnp.linalg.norm(base) * jnp.linalg.norm(out30))
+        assert float(cos) > 0.5
+
+    def test_ber_tolerance_of_prune_selection(self):
+        # Fig. S28: selection quality degrades gracefully with BER
+        rng = np.random.default_rng(1)
+        w = rng.standard_normal(64)
+        idx0, _, _ = insitu.tns_prune(w, 0.3, ber=0.0)
+        overlaps = []
+        for ber in [0.01, 0.05, 0.2]:
+            idx, _, _ = insitu.tns_prune(w, 0.3, ber=ber, seed=3)
+            overlaps.append(len(set(idx0) & set(idx)) / len(idx0))
+        assert overlaps[0] >= overlaps[-1] - 0.2
+        assert overlaps[0] > 0.5

@@ -1,0 +1,93 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+class TestRadixTopkKernel:
+    @pytest.mark.parametrize("b,n", [(1, 8), (4, 60), (8, 160), (3, 257),
+                                     (16, 128)])
+    @pytest.mark.parametrize("k", [1, 4, 6])
+    def test_sweep_shapes(self, b, n, k):
+        if k > n:
+            pytest.skip("k>n")
+        keys = jnp.asarray(RNG.integers(0, 2**32, (b, n), dtype=np.uint32))
+        mkeys, idx = __import__("repro.kernels.radix_topk",
+                                fromlist=["topk_keys"]).topk_keys(keys, k)
+        rkeys, ridx = ref.topk_keys_ref(keys, k)
+        np.testing.assert_array_equal(np.asarray(mkeys), np.asarray(rkeys))
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_topk_values_vs_lax(self, dtype):
+        x = jnp.asarray(RNG.standard_normal((6, 96)), dtype=dtype)
+        v, i = ops.topk(x, 4)
+        vr, ir = jax.lax.top_k(x.astype(jnp.float32), 4)
+        np.testing.assert_allclose(np.asarray(v, np.float32), np.asarray(vr))
+
+    def test_duplicate_keys_tie_order(self):
+        keys = jnp.asarray(np.array([[7, 3, 3, 9, 3]], np.uint32))
+        mkeys, idx = __import__("repro.kernels.radix_topk",
+                                fromlist=["topk_keys"]).topk_keys(keys, 3)
+        np.testing.assert_array_equal(np.asarray(idx)[0], [1, 2, 4])
+
+
+class TestDigitReadKernel:
+    @pytest.mark.parametrize("b,w,n", [(1, 4, 6), (4, 8, 100), (2, 16, 33),
+                                       (3, 32, 200)])
+    @pytest.mark.parametrize("ascending", [True, False])
+    def test_sweep(self, b, w, n, ascending):
+        planes = jnp.asarray(RNG.integers(0, 2, (b, w, n), dtype=np.uint8))
+        mask, drs = ops.min_search(planes, ascending=ascending)
+        rmask, rdrs = ref.min_search_ref(planes, ascending=ascending)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+        np.testing.assert_array_equal(np.asarray(drs), np.asarray(rdrs))
+
+
+class TestPackKernel:
+    @pytest.mark.parametrize("shape", [(7,), (33, 9), (4, 130, 3)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_pack_matches_ref(self, shape, dtype):
+        if dtype == jnp.int32:
+            x = jnp.asarray(RNG.integers(-2**31, 2**31 - 1, shape,
+                                         dtype=np.int32))
+        else:
+            x = jnp.asarray(RNG.standard_normal(shape) * 1e3, dtype=dtype)
+        np.testing.assert_array_equal(np.asarray(ops.pack_keys(x)),
+                                      np.asarray(ref.pack_keys_ref(x)))
+
+    def test_pack_order_preserving_and_invertible(self):
+        x = jnp.asarray(np.array([-np.inf, -3.5, -0.0, 0.0, 1e-9, 7.25,
+                                  np.inf], np.float32))
+        k = ops.pack_keys(x)
+        assert bool(jnp.all(k[1:] >= k[:-1]))
+        np.testing.assert_array_equal(np.asarray(ops.unpack_keys_f32(k)),
+                                      np.asarray(x))
+
+
+class TestPrunedMatmulKernel:
+    @pytest.mark.parametrize("m,kdim,n", [(8, 16, 8), (100, 64, 72),
+                                          (130, 257, 120)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, m, kdim, n, dtype):
+        x = jnp.asarray(RNG.standard_normal((m, kdim)), dtype=dtype)
+        w = jnp.asarray(RNG.standard_normal((kdim, n)), dtype=dtype)
+        keep = jnp.asarray(RNG.random(kdim) > 0.3)
+        out = ops.pruned_matmul(x, w, keep)
+        rout = ref.pruned_matmul_ref(x, w, keep)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(rout, np.float32),
+                                   rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+    def test_full_prune_zeroes_output(self):
+        x = jnp.ones((4, 32), jnp.float32)
+        w = jnp.ones((32, 16), jnp.float32)
+        out = ops.pruned_matmul(x, w, jnp.zeros(32, bool))
+        assert float(jnp.abs(out).max()) == 0.0

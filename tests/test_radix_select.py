@@ -1,0 +1,87 @@
+"""Throughput-mode comparison-free selection vs. lax references."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core import radix_select as rs
+
+_f32 = st.floats(-1e6, 1e6, allow_nan=False, width=32)
+
+
+class TestExactTopK:
+    @given(st.lists(_f32, min_size=16, max_size=16), st.sampled_from([1, 4, 6]))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_lax_topk(self, data, k):
+        x = jnp.asarray(np.array(data, dtype=np.float32))[None, :]
+        v, i = rs.topk_values(x, k)
+        vr, ir = jax.lax.top_k(x, k)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(vr))
+
+    def test_bf16_router_shapes(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((4, 7, 160)), dtype=jnp.bfloat16)
+        v, i = rs.topk_values(x, 6)
+        vr, ir = jax.lax.top_k(x.astype(jnp.float32), 6)
+        np.testing.assert_allclose(np.asarray(v, dtype=np.float32),
+                                   np.asarray(vr))
+
+    def test_tie_handling_first_index(self):
+        x = jnp.asarray(np.array([[1.0, 5.0, 5.0, 0.0]], np.float32))
+        _, i = rs.topk_values(x, 2)
+        np.testing.assert_array_equal(np.asarray(i)[0], [1, 2])
+
+
+class TestThresholdMask:
+    @given(st.lists(st.integers(-1000, 1000), min_size=32, max_size=32),
+           st.integers(1, 31))
+    @settings(max_examples=25, deadline=None)
+    def test_mask_selects_k_smallest(self, data, k):
+        x = jnp.asarray(np.array(data, dtype=np.float32))
+        keys = bp.sort_key_jnp(x)
+        m = np.asarray(rs.topk_threshold_mask(keys, k))
+        assert m.sum() == k
+        chosen = np.sort(np.array(data, np.float32)[m])
+        ref = np.sort(np.array(data, np.float32))[:k]
+        np.testing.assert_allclose(chosen, ref)
+
+    def test_traced_k_runtime_tunable(self):
+        # run-time tunable sparsity: k is a traced value, one compilation
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(64),
+                        dtype=jnp.float32)
+        f = jax.jit(lambda xs, kk: rs.prune_smallest_mask(xs, kk))
+        for k in [3, 17, 40]:
+            m = np.asarray(f(x, jnp.int32(k)))
+            assert m.sum() == k
+
+    def test_logits_mask_top1_is_argmax(self):
+        x = jnp.asarray(np.random.default_rng(2).standard_normal((5, 100)),
+                        dtype=jnp.float32)
+        m = np.asarray(rs.topk_logits_mask(x, 1))
+        np.testing.assert_array_equal(m.argmax(-1), np.asarray(x).argmax(-1))
+
+
+class TestRadixSort:
+    @given(st.lists(_f32, min_size=2, max_size=48))
+    @settings(max_examples=25, deadline=None)
+    def test_sorts_floats(self, data):
+        x = jnp.asarray(np.array(data, dtype=np.float32))
+        sv, perm = rs.sort_values(x)
+        np.testing.assert_allclose(np.asarray(sv), np.sort(data))
+        assert len(set(np.asarray(perm).tolist())) == len(data)
+
+    def test_stability(self):
+        x = jnp.asarray(np.array([3, 1, 2, 1, 3, 1], np.int32))
+        _, p = rs.sort_values(x)
+        np.testing.assert_array_equal(np.asarray(p), [1, 3, 5, 2, 0, 4])
+
+    @given(st.lists(st.integers(0, 2**31 - 1), min_size=2, max_size=32))
+    @settings(max_examples=15, deadline=None)
+    def test_uint_keys_r8(self, data):
+        keys = jnp.asarray(np.array(data, dtype=np.uint32))
+        perm = rs.radix_sort_keys(keys, r=8)
+        out = np.asarray(keys)[np.asarray(perm)]
+        np.testing.assert_array_equal(out, np.sort(np.array(data, np.uint32)))

@@ -1,0 +1,213 @@
+"""Substrate tests: data determinism, AdamW training descent, gradient
+compression, checkpoint integrity/resume, fault-tolerance runtime."""
+import os
+import shutil
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline as dp
+from repro.models import transformer as T
+from repro.models.config import ShapeConfig
+from repro.optim import adamw
+from repro.runtime import fault
+
+
+class TestData:
+    def test_determinism_and_shard_consistency(self):
+        src = dp.TokenSource(vocab=100, seed=3)
+        x1, y1 = src.batch(step=7, start=0, count=8, seq_len=16)
+        x2, y2 = src.batch(step=7, start=0, count=8, seq_len=16)
+        np.testing.assert_array_equal(x1, x2)
+        # shard [4:8) equals rows 4..8 of the full batch (restart invariant)
+        xs, _ = src.batch(step=7, start=4, count=4, seq_len=16)
+        np.testing.assert_array_equal(xs, x1[4:])
+        # labels are next tokens
+        np.testing.assert_array_equal(y1[:, :-1], x1[:, 1:])
+
+    def test_different_steps_differ(self):
+        src = dp.TokenSource(vocab=100, seed=3)
+        x1, _ = src.batch(1, 0, 4, 16)
+        x2, _ = src.batch(2, 0, 4, 16)
+        assert not np.array_equal(x1, x2)
+
+
+class TestOptimizer:
+    def _setup(self, compress=False):
+        cfg = configs.get_config("olmo_1b").reduced()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        ocfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=1, compress=compress,
+                                 weight_decay=0.0)
+        state = adamw.init(params, ocfg)
+        return cfg, params, ocfg, state
+
+    def test_loss_descends(self):
+        cfg, params, ocfg, state = self._setup()
+        shape = ShapeConfig("t", 32, 8, "train")
+        x, y = dp.host_batch(cfg, shape, 0)
+
+        @jax.jit
+        def step(p, s):
+            (loss, _), g = jax.value_and_grad(
+                lambda pp: T.loss_fn(pp, cfg, x, y), has_aux=True)(p)
+            p2, s2, m = adamw.update(p, g, s, ocfg)
+            return p2, s2, loss
+
+        losses = []
+        for _ in range(20):
+            params, state, loss = step(params, state)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses[::5]
+
+    def test_int8_roundtrip_error_bounded(self):
+        g = jnp.asarray(np.random.default_rng(0).standard_normal(512),
+                        jnp.float32)
+        q, s = adamw.quantize_int8(g)
+        deq = adamw.dequantize_int8(q, s)
+        # symmetric per-tensor int8: error bounded by scale/2
+        assert float(jnp.max(jnp.abs(deq - g))) <= float(s) / 2 + 1e-7
+
+    def test_loss_descends_under_compression(self):
+        cfg, params, ocfg, state = self._setup(compress=True)
+        shape = ShapeConfig("t", 32, 8, "train")
+        x, y = dp.host_batch(cfg, shape, 0)
+
+        @jax.jit
+        def step(p, s):
+            (loss, _), g = jax.value_and_grad(
+                lambda pp: T.loss_fn(pp, cfg, x, y), has_aux=True)(p)
+            p2, s2, _ = adamw.update(p, g, s, ocfg)
+            return p2, s2, loss
+
+        losses = []
+        for _ in range(20):
+            params, state, loss = step(params, state)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses[::5]
+
+    def test_error_feedback_accumulates(self):
+        # a gradient too small for one int8 step must still apply over many
+        # steps via the residual
+        ocfg = adamw.AdamWConfig(lr=1.0, b1=0.0, b2=0.0, eps=1.0,
+                                 weight_decay=0.0, clip_norm=1e9,
+                                 warmup_steps=1, compress=True)
+        p = {"w": jnp.zeros((4,), jnp.float32)}
+        s = adamw.init(p, ocfg)
+        g = {"w": jnp.array([1.0, 1e-4, 0.0, 0.0], jnp.float32)}
+        for _ in range(80):
+            p, s, _ = adamw.update(p, g, s, ocfg)
+        # the tiny component moved (error feedback), not just the big one
+        assert abs(float(p["w"][1])) > 0.0
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip_and_resume(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        mgr.save(1, tree)
+        mgr.save(5, jax.tree.map(lambda x: x * 2, tree))
+        restored, step = mgr.restore(tree)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]) * 2)
+
+    def test_keep_last_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        t = {"x": jnp.zeros(3)}
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, t)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_corrupted_checkpoint_skipped(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        t = {"x": jnp.arange(4.0)}
+        mgr.save(1, t)
+        mgr.save(2, jax.tree.map(lambda x: x + 1, t))
+        # corrupt newest
+        with open(os.path.join(str(tmp_path), "step_000000002",
+                               "arrays.npz"), "r+b") as f:
+            f.seek(100)
+            f.write(b"\x00" * 32)
+        restored, step = mgr.restore(t)
+        assert step == 1          # fell back past the corrupted one
+        np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                      np.arange(4.0))
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save_async(7, {"x": jnp.ones((128, 128))})
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+
+class TestFaultRuntime:
+    def test_straggler_detection(self):
+        mon = fault.StragglerMonitor(threshold=2.0)
+        for _ in range(10):
+            assert not mon.observe(1.0)
+        assert mon.observe(5.0)
+        assert mon.flagged_steps == 1
+        assert mon.ema == pytest.approx(1.0, rel=0.01)
+
+    def test_heartbeat_suspects(self):
+        hb = fault.Heartbeat(interval_s=0.01, timeout_s=0.05)
+        hb.beat("hostA")
+        hb.beat("hostB")
+        assert hb.suspects() == []
+        time.sleep(0.08)
+        hb.beat("hostB")
+        assert hb.suspects() == ["hostA"]
+
+    def test_retries_then_success(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise RuntimeError("preempted")
+            return "ok"
+
+        out = fault.run_step_with_retries(flaky, retries=5, backoff_s=0.01)
+        assert out == "ok" and len(calls) == 3
+
+    def test_best_mesh_shape(self):
+        assert fault.best_mesh_shape(512, 16) == (32, 16)
+        assert fault.best_mesh_shape(488, 16) == (61, 8)
+        assert fault.best_mesh_shape(7, 16) == (7, 1)
+
+    def test_elastic_remesh_subprocess(self):
+        code = r"""
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.runtime import fault
+devs = jax.devices()
+mesh = fault.elastic_remesh(devs, model_parallel=4)
+assert dict(zip(mesh.axis_names, mesh.devices.shape)) == {"data": 2, "model": 4}
+state = {"w": np.arange(64.0).reshape(8, 8)}
+sharded = fault.reshard_state(state, mesh, lambda p, l: P("data", "model"))
+# lose 3 devices -> 5 survivors -> (5, 1) mesh
+mesh2 = fault.elastic_remesh(devs[:5], model_parallel=4)
+assert dict(zip(mesh2.axis_names, mesh2.devices.shape)) == {"data": 5, "model": 1}
+# hmm: 8x8 array needs divisible sharding; use (5,1)-compatible array
+state2 = {"w": np.arange(40.0).reshape(5, 8)}
+res = fault.reshard_state(state2, mesh2, lambda p, l: P("data", None))
+np.testing.assert_array_equal(np.asarray(res["w"]), state2["w"])
+print("OK")
+"""
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8")
+        out = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                             env=env, capture_output=True, text=True,
+                             timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout

@@ -1,0 +1,94 @@
+"""JAX TNS engine must be cycle-for-cycle identical to the Python oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core import ref_tns as rt
+from repro.core import tns as jt
+
+S4_DATA = [2, 3, 9, 6, 14, 14]
+S8_DATA = [9, 2, 14, 3]
+
+
+def _agree(values, width, k, fmt=bp.UNSIGNED, ascending=True, level_bits=1,
+           ideal_lifo=False):
+    o = rt.tns_sort(values, width=width, k=k, fmt=fmt, ascending=ascending,
+                    level_bits=level_bits, ideal_lifo=ideal_lifo)
+    j = jt.tns_sort(values, width=width, k=k, fmt=fmt, ascending=ascending,
+                    level_bits=level_bits, ideal_lifo=ideal_lifo)
+    assert int(j.cycles) == o.cycles, (int(j.cycles), o.cycles)
+    assert int(j.drs) == o.drs
+    assert int(j.reload_cycles) == o.reload_cycles
+    np.testing.assert_array_equal(np.asarray(j.perm), o.perm)
+
+
+class TestPaperTracesJax:
+    def test_s4_10_cycles(self):
+        j = jt.tns_sort(S4_DATA, width=4, k=3)
+        assert int(j.cycles) == 10
+
+    def test_s83_ml_5_cycles(self):
+        j = jt.tns_sort(S8_DATA, width=4, k=1, level_bits=2)
+        assert int(j.cycles) == 5
+
+    def test_s6_float_12_cycles(self):
+        data = np.array([4.079, 1.25, -1.625, -1.5], dtype=np.float16)
+        j = jt.tns_sort(data, width=16, k=2, fmt=bp.FLOAT)
+        assert int(j.cycles) == 12
+
+    def test_s6_twos_5_cycles(self):
+        j = jt.tns_sort([3, 5, -2, -7], width=4, k=2, fmt=bp.TWOS)
+        assert int(j.cycles) == 5
+
+    def test_stop_after_topm(self):
+        # §3.2: in-situ pruning locates the p% smallest then stops.
+        data = [13, 2, 7, 2, 40, 1, 9, 30]
+        j = jt.tns_sort(data, width=8, k=2, stop_after=3)
+        perm = np.asarray(j.perm)[:3]
+        np.testing.assert_array_equal(np.sort(np.asarray(data)[perm]),
+                                      [1, 2, 2])
+
+    def test_k0_degenerates_to_restart(self):
+        # k=0 (no LIFO) still sorts, just with more cycles — BTS-like.
+        j0 = jt.tns_sort(S4_DATA, width=4, k=0)
+        j3 = jt.tns_sort(S4_DATA, width=4, k=3)
+        assert int(j0.cycles) >= int(j3.cycles)
+
+
+class TestOracleEquivalence:
+    @given(st.lists(st.integers(0, 255), min_size=16, max_size=16),
+           st.sampled_from([1, 2, 4]))
+    @settings(max_examples=25, deadline=None)
+    def test_unsigned8(self, data, k):
+        _agree(data, width=8, k=k)
+
+    @given(st.lists(st.integers(0, 2**16 - 1), min_size=12, max_size=12))
+    @settings(max_examples=15, deadline=None)
+    def test_unsigned16(self, data):
+        _agree(data, width=16, k=3)
+
+    @given(st.lists(st.integers(-128, 127), min_size=12, max_size=12))
+    @settings(max_examples=15, deadline=None)
+    def test_twos(self, data):
+        _agree(data, width=8, k=2, fmt=bp.TWOS)
+
+    @given(st.lists(st.floats(-100, 100, allow_nan=False, width=16),
+                    min_size=10, max_size=10))
+    @settings(max_examples=15, deadline=None)
+    def test_float16(self, data):
+        arr = np.array(data, dtype=np.float16)
+        _agree(arr, width=16, k=2, fmt=bp.FLOAT)
+
+    @given(st.lists(st.integers(0, 255), min_size=14, max_size=14),
+           st.sampled_from([2, 4]), st.booleans())
+    @settings(max_examples=20, deadline=None)
+    def test_multilevel(self, data, lb, ideal):
+        _agree(data, width=8, k=2, level_bits=lb, ideal_lifo=ideal)
+
+    @given(st.lists(st.integers(0, 255), min_size=12, max_size=12))
+    @settings(max_examples=10, deadline=None)
+    def test_descending(self, data):
+        _agree(data, width=8, k=2, ascending=False)

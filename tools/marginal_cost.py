@@ -1,0 +1,90 @@
+"""Marginal-layer roofline costing for archs too deep to compile unrolled.
+
+Compiles the cell at two reduced depths d1 < d2 (unrolled, accum=1), then
+extrapolates linearly to the full depth L:
+
+    X(L) ~= X(d2) + (X(d2) - X(d1)) / (d2 - d1) * (L - d2)
+
+for X in {flops, bytes, collective bytes}.  Valid because layers are
+homogeneous by construction (the depth override preserves the layer
+pattern, so each marginal layer has identical cost).  Writes a synthetic
+``*_cost.json`` record compatible with tools/make_roofline_table.py.
+
+Usage:
+  PYTHONPATH=src python tools/marginal_cost.py <arch> <shape> <d1> <d2> \
+      [out_dir]
+"""
+import json
+import os
+import subprocess
+import sys
+
+
+def run_depth(arch, shape, depth, out_dir):
+    tag = f"_d{depth}"
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--unroll", "--accum", "1",
+         "--depth", str(depth), "--tag", tag, "--out", out_dir],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=dict(os.environ, PYTHONPATH="src"), check=True, timeout=2400)
+    path = os.path.join(out_dir, f"{arch}__{shape}__16x16{tag}.json")
+    return json.load(open(path))
+
+
+def main():
+    arch, shape, d1, d2 = sys.argv[1], sys.argv[2], int(sys.argv[3]), int(sys.argv[4])
+    out_dir = sys.argv[5] if len(sys.argv) > 5 else "experiments/roofline"
+    sys.path.insert(0, "src")
+    from repro import configs
+    from repro.launch import roofline as rl
+    from repro.models import accounting
+    from repro.models.config import ALL_SHAPES
+
+    r1 = run_depth(arch, shape, d1, out_dir)
+    r2 = run_depth(arch, shape, d2, out_dir)
+    cfg = configs.get_config(arch)
+    L = cfg.n_layers
+    shp = {s.name: s for s in ALL_SHAPES}[shape]
+
+    def extrap(key_chain):
+        def get(r):
+            v = r
+            for k in key_chain:
+                v = v[k]
+            return float(v)
+        slope = (get(r2) - get(r1)) / (d2 - d1)
+        return get(r2) + slope * (L - d2)
+
+    flops = extrap(["roofline", "flops_per_device"])
+    byts = extrap(["roofline", "bytes_per_device"])
+    coll = extrap(["roofline", "coll_bytes_per_device"])
+    mf = accounting.model_flops(cfg, shp)
+    roof = rl.Roofline(
+        compute_s=flops / rl.PEAK_FLOPS,
+        memory_s=byts / rl.HBM_BW,
+        collective_s=coll / rl.ICI_BW,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll, chips=r2["chips"],
+        model_flops=mf, useful_ratio=mf / (flops * r2["chips"]))
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "16x16",
+        "kind": r2["kind"], "chips": r2["chips"],
+        "method": f"marginal-layer extrapolation d1={d1}, d2={d2} -> L={L}",
+        "params_total": accounting.param_count(cfg),
+        "params_active": accounting.active_param_count(cfg),
+        "memory": r2["memory"],   # reduced-depth memory (fit record is
+                                  # the scanned full-depth run)
+        "roofline": roof.to_dict(),
+        "unroll": True, "depth": None, "tag": "_cost",
+    }
+    out = os.path.join(out_dir, f"{arch}__{shape}__16x16_cost.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[marginal] {arch} x {shape}: "
+          f"C{roof.compute_s:.4f}/M{roof.memory_s:.4f}/"
+          f"X{roof.collective_s:.4f} bottleneck={roof.bottleneck}")
+
+
+if __name__ == "__main__":
+    main()
