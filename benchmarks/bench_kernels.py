@@ -1,6 +1,10 @@
-"""Kernel micro-benchmarks: radix-select engines vs lax references (CPU
-wall time is advisory; TPU perf is what the roofline section models) and
-Pallas interpret-mode validation timings."""
+"""Kernel micro-benchmarks over the sort-engine dispatchers (CPU wall time
+is advisory; TPU perf is what the roofline section models).
+
+The router-shaped top-k comparison enumerates ``repro.sort.TOPK_ENGINES``
+(radix / pallas / lax) through the one facade the models call, so a new
+in-model engine automatically joins the comparison.
+"""
 from __future__ import annotations
 
 import time
@@ -9,11 +13,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import radix_select as rs
+from repro import sort as sort_engine
 
 
 def _timeit(fn, *args, reps=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -24,46 +28,71 @@ def _timeit(fn, *args, reps=20):
 def run(report):
     rng = np.random.default_rng(0)
 
-    # router-shaped top-k: (tokens, experts)
+    # router-shaped top-k: (tokens, experts) through the facade, every
+    # registered in-model engine
     x = jnp.asarray(rng.standard_normal((512, 160)), jnp.float32)
-    f_radix = jax.jit(lambda v: rs.topk_values(v, 6))
-    f_lax = jax.jit(lambda v: jax.lax.top_k(v, 6))
-    us_r = _timeit(f_radix, x)
-    us_l = _timeit(f_lax, x)
-    vr, ir = f_radix(x)
-    vl, il = f_lax(x)
-    report("kernel_router_topk_radix", us_r,
-           {"match_lax": bool(jnp.allclose(vr, vl))})
-    report("kernel_router_topk_lax", us_l, {})
+    ref_vals = None
+    for name in sort_engine.TOPK_ENGINES:
+        f = jax.jit(lambda v, n=name: sort_engine.topk(v, 6, engine=n))
+        us = _timeit(f, x)
+        vals, _ = f(x)
+        if ref_vals is None:
+            ref_vals = vals
+        report(f"kernel_router_topk_{name}", us,
+               {"match": bool(jnp.allclose(vals, ref_vals))})
 
-    # vocab-scale threshold mask
+    # vocab-scale threshold mask (decode-time top-k filter)
     logits = jnp.asarray(rng.standard_normal((8, 102400)), jnp.float32)
-    f_mask = jax.jit(lambda v: rs.topk_logits_mask(v, 50))
+    f_mask = jax.jit(lambda v: sort_engine.topk_mask(v, 50, largest=True))
     us_m = _timeit(f_mask, logits, reps=5)
     m = f_mask(logits)
     report("kernel_vocab_topk_mask", us_m,
            {"selected": int(jnp.sum(m[0]))})
 
     # full radix sort vs jnp.sort
+    from repro.core import radix_select as rs
     keys = jnp.asarray(rng.integers(0, 2**32, (16, 1024), dtype=np.uint32))
     f_rsort = jax.jit(lambda v: rs.radix_sort_keys(v, r=8))
     f_jsort = jax.jit(lambda v: jnp.argsort(v, axis=-1))
     report("kernel_radix_sort_1024", _timeit(f_rsort, keys, reps=5), {})
     report("kernel_lax_argsort_1024", _timeit(f_jsort, keys, reps=5), {})
 
-    # Pallas kernels (interpret mode — correctness path on CPU)
-    from repro.kernels import ops
+    # batched cycle-faithful TNS: one compiled dispatch vs a Python loop
+    # over single-instance calls (the serving bottleneck this PR removes)
+    from repro.core import bitplane as bp
+    from repro.core import tns as jt
+    B, N, W = 64, 256, 16
+    data = rng.integers(0, 2**16, (B, N))
+    planes = jnp.asarray(bp.to_bitplanes(data, W, bp.UNSIGNED
+                                         ).astype(np.int32))
+    f_b = lambda: np.asarray(
+        jt.tns_sort_planes_batched(planes, None, k=2).perm)
+    f_b()                                 # compile
+    t0 = time.perf_counter()
+    f_b()
+    us_batched = (time.perf_counter() - t0) * 1e6
+    np.asarray(jt.tns_sort_planes(planes[0], None, k=2).perm)   # compile
+    t0 = time.perf_counter()
+    for b in range(B):
+        np.asarray(jt.tns_sort_planes(planes[b], None, k=2).perm)
+    us_loop = (time.perf_counter() - t0) * 1e6
+    report("kernel_batched_tns_b64", us_batched,
+           {"speedup_vs_loop": round(us_loop / us_batched, 2)})
+    report("kernel_tns_python_loop_b64", us_loop, {})
+
+    # Pallas kernels (backend-aware: interpret on CPU, compiled on TPU)
+    from repro.kernels import backend, ops
     xk = jnp.asarray(rng.standard_normal((8, 160)), jnp.float32)
     t0 = time.perf_counter()
     v, i = ops.topk(xk, 6)
     jax.block_until_ready(v)
-    report("kernel_pallas_topk_interpret", (time.perf_counter() - t0) * 1e6,
-           {"note": "interpret-mode validation, not TPU perf"})
+    report("kernel_pallas_topk", (time.perf_counter() - t0) * 1e6,
+           {"mode": backend.mode()})
     a = jnp.asarray(rng.standard_normal((128, 256)), jnp.bfloat16)
     w = jnp.asarray(rng.standard_normal((256, 128)), jnp.bfloat16)
     keep = jnp.asarray(rng.random(256) > 0.3)
     t0 = time.perf_counter()
     out = ops.pruned_matmul(a, w, keep)
     jax.block_until_ready(out)
-    report("kernel_pallas_pruned_matmul_interpret",
-           (time.perf_counter() - t0) * 1e6, {})
+    report("kernel_pallas_pruned_matmul",
+           (time.perf_counter() - t0) * 1e6, {"mode": backend.mode()})

@@ -3,11 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only sort,apps,...]
+    PYTHONPATH=src python -m benchmarks.run --smoke      # CI fast pass
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 
 def _report(name: str, us: float, derived: dict | None = None) -> None:
@@ -15,12 +17,75 @@ def _report(name: str, us: float, derived: dict | None = None) -> None:
     print(f"{name},{us:.1f},{payload}", flush=True)
 
 
+def smoke() -> int:
+    """Fast CI pass over the engine registry: every engine sorts a small
+    dataset, every permutation matches, the in-model dispatchers agree
+    with lax.  Returns a process exit code."""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro import sort as sort_engine
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**16, 64).astype(np.uint16)
+    ref = None
+    failures = []
+    for name, spec in sorted(sort_engine.engines().items()):
+        try:
+            res = sort_engine.sort(x, engine=name, k=2)
+        except NotImplementedError:
+            continue
+        perm = np.asarray(res.indices)
+        if ref is None:
+            ref = perm
+        ok = bool(np.array_equal(perm, ref))
+        _report(f"smoke_engine_{name}", 0.0,
+                {"ok": ok, "mode": spec.mode,
+                 "cycles": None if res.cycles is None
+                 else int(np.mean(res.cycles))})
+        if not ok:
+            failures.append(name)
+    # top-m engines that refuse full sorts still must agree on the prefix
+    res = sort_engine.sort(x, engine="pallas-topk", stop_after=8)
+    ok = bool(np.array_equal(np.asarray(res.indices), ref[:8]))
+    _report("smoke_engine_pallas-topk_top8", 0.0, {"ok": ok})
+    if not ok:
+        failures.append("pallas-topk")
+    # batched dispatch parity (B, N)
+    xb = rng.standard_normal((8, 32)).astype(np.float32)
+    a = sort_engine.sort(xb, engine="tns", k=2).indices
+    b = sort_engine.sort(xb, engine="radix").indices
+    ok = bool(np.array_equal(a, b))
+    _report("smoke_batched_parity", 0.0, {"ok": ok})
+    if not ok:
+        failures.append("batched")
+    # in-model dispatchers
+    lg = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    vl, _ = jax.lax.top_k(lg, 4)
+    for name in sort_engine.TOPK_ENGINES:
+        v, _ = sort_engine.topk(lg, 4, engine=name)
+        ok = bool(jnp.allclose(v, vl))
+        _report(f"smoke_topk_{name}", 0.0, {"ok": ok})
+        if not ok:
+            failures.append(f"topk-{name}")
+    if failures:
+        print(f"# SMOKE FAILED: {failures}", flush=True)
+        return 1
+    print("# SMOKE OK", flush=True)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section filter "
                          "(sort,apps,sweeps,kernels,roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast engine-registry pass for CI")
     args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    if args.smoke:
+        sys.exit(smoke())
 
     from benchmarks import (bench_apps, bench_kernels, bench_roofline,
                             bench_sort, bench_sweeps)
@@ -32,7 +97,6 @@ def main() -> None:
         "roofline": bench_roofline.run,  # §Roofline table from dry-run
     }
     chosen = (args.only.split(",") if args.only else list(sections))
-    print("name,us_per_call,derived")
     for name in chosen:
         print(f"# --- {name} ---")
         sections[name](_report)

@@ -78,24 +78,34 @@ def raw_bits(x, width: int, fmt: str) -> np.ndarray:
 
 
 def to_bitplanes(x, width: int, fmt: str) -> np.ndarray:
-    """Encode ``x`` (shape (N,)) into a (W, N) uint8 digit-plane matrix.
-    Row 0 = MSB (the first column the paper's DR visits)."""
+    """Encode ``x`` (shape (..., N)) into a (..., W, N) uint8 digit-plane
+    matrix.  Row 0 = MSB (the first column the paper's DR visits).  Leading
+    dims are independent datasets (one memristor bank each)."""
     u = raw_bits(x, width, fmt).astype(np.uint64)
     shifts = np.arange(width - 1, -1, -1, dtype=np.uint64)
-    return ((u[None, :] >> shifts[:, None]) & np.uint64(1)).astype(np.uint8)
+    return ((u[..., None, :] >> shifts[:, None])
+            & np.uint64(1)).astype(np.uint8)
 
 
 def to_digitplanes(x, width: int, fmt: str, level_bits: int) -> np.ndarray:
     """Radix-2**level_bits digit planes for the multi-level strategy
-    (§2.3.3): (ceil(W/n), N) uint32, most-significant digit first."""
+    (§2.3.3): (..., ceil(W/n), N) uint32, most-significant digit first."""
     pad = (-width) % level_bits
     width_p = width + pad
     u = raw_bits(x, width, fmt).astype(np.uint64)
     ndig = width_p // level_bits
     shifts = (np.arange(ndig - 1, -1, -1, dtype=np.uint64)
               * np.uint64(level_bits))
-    digits = (u[None, :] >> shifts[:, None]) & np.uint64((1 << level_bits) - 1)
+    digits = ((u[..., None, :] >> shifts[:, None])
+              & np.uint64((1 << level_bits) - 1))
     return digits.astype(np.uint32)
+
+
+def sign_plane(x, width: int, fmt: str) -> np.ndarray:
+    """Boolean sign column (MSB) of ``x`` under ``fmt`` — the extra array
+    line the paper's sign-magnitude / float periphery watches (S6)."""
+    u = raw_bits(x, width, fmt).astype(np.uint64)
+    return ((u >> np.uint64(width - 1)) & np.uint64(1)).astype(bool)
 
 
 def from_bitplanes(planes, fmt: str):

@@ -261,9 +261,544 @@ def tns_sort(values, width: int, k: int, fmt: str = bp.UNSIGNED,
         digits = bp.to_digitplanes(x, width, fmt, level_bits)
     sign = None
     if fmt in (bp.SIGNMAG, bp.FLOAT):
-        u = bp.raw_bits(x, width, fmt).astype(np.uint64)
-        sign = jnp.asarray(((u >> np.uint64(width - 1)) & np.uint64(1)).astype(bool))
+        sign = jnp.asarray(bp.sign_plane(x, width, fmt))
     return tns_sort_planes(jnp.asarray(digits.astype(np.int32)), sign,
                            k=k, fmt=fmt, ascending=ascending,
                            level_bits=level_bits, ideal_lifo=ideal_lifo,
                            stop_after=stop_after)
+
+
+# ---------------------------------------------------------------------------
+# Batched machine: B independent banks in one compiled dispatch.
+#
+# ``vmap`` over the single-instance machine is cycle-exact but slow: every
+# ``lax.cond`` becomes "execute both branches + select the whole carry",
+# so one controller cycle costs ~4x the straight-line work.  The batched
+# step below is the same state machine hand-vectorized over a leading B
+# axis — branch-free, with each phase computed once under a boolean
+# instance mask — plus three transformations that only change *cost*, not
+# semantics (cycle parity with the single-instance machine, and thus the
+# Python oracle, is asserted in tests/test_sort_engine.py):
+#
+#   * the k-LIFO is a ring buffer (head index + length) so drop-oldest
+#     pushes are one masked write instead of per-cycle (B, k, N) shifts;
+#   * counting replaces searching: the invariant valid ⊆ alive lets the
+#     "numbers left?" / "repeat set drained?" checks reuse running tallies
+#     (alive_cnt, nv) instead of fresh any()-reductions every cycle;
+#   * all per-instance controller registers live in ONE (B, 10) int32
+#     array, so XLA emits one fused kernel for the whole scalar block
+#     instead of ~20 tiny [B]-shaped kernels per cycle (the dominant cost
+#     on CPU, where dispatch overhead is per-kernel, not per-byte);
+#   * emissions write an inverse-permutation ``rank`` (rank[i] = emission
+#     position of element i) — one masked store reusing the emission
+#     one-hot — and the forward ``perm`` is reconstructed by a single
+#     scatter after the loop;
+#   * the while_loop body executes UNROLL controller cycles per trip to
+#     amortize XLA's fixed per-trip cost (finished instances self-freeze
+#     via the ``running`` mask, so over-stepping is impossible).
+# ---------------------------------------------------------------------------
+
+
+class BatchCarry(NamedTuple):
+    alive: jnp.ndarray          # (B, N) bool
+    valid: jnp.ndarray          # (B, N) bool, always a subset of alive
+    lifo_mask: jnp.ndarray      # (B, k, N) bool — ring buffer
+    lifo_digit: jnp.ndarray     # (B, k) int32
+    rank: jnp.ndarray           # (B, N) int32 emission position, -1 if none
+    sc: jnp.ndarray             # (B, 10) int32 packed controller registers
+
+
+# sc column indices (packed scalar block)
+_COL, _START, _LEN, _RP, _OUT, _CYC, _DRS, _RLC, _ACNT, _NV = range(10)
+
+
+def _make_batched_step(digits, sign_bits, fmt, ascending, level_bits,
+                       ideal_lifo, stop_n):
+    B, D, N = digits.shape
+    BIG = jnp.int32(1 << 30)
+    iota_n = jnp.arange(N, dtype=jnp.int32)
+
+    def neg_pending(alive):
+        if sign_bits is None:
+            return jnp.zeros(B, dtype=bool)
+        s = sign_bits if ascending else ~sign_bits
+        return jnp.any(alive & s, axis=-1)
+
+    def ring_slot(start, i, k):
+        return jnp.where(start + i >= k, start + i - k, start + i)
+
+    def take_level(stack, ti):
+        """stack (B, k, ...), ti (B,) -> stack[b, ti[b]].  k is a tiny
+        static constant, so a select chain beats XLA CPU's generic
+        gather by a wide margin inside the hot loop."""
+        k = stack.shape[1]
+        out = stack[:, 0]
+        for i in range(1, k):
+            hit = ti == i
+            if stack.ndim == 3:
+                hit = hit[:, None]
+            out = jnp.where(hit, stack[:, i], out)
+        return out
+
+    def step(st: BatchCarry) -> BatchCarry:
+        k = st.lifo_mask.shape[1]
+        col0 = st.sc[:, _COL]
+        start0 = st.sc[:, _START]
+        len0 = st.sc[:, _LEN]
+        pending = st.sc[:, _RP] > 0
+        out0 = st.sc[:, _OUT]
+        acnt = st.sc[:, _ACNT]
+        nv0 = st.sc[:, _NV]
+        running = out0 < stop_n                                # (B,)
+        cycles = st.sc[:, _CYC] + running.astype(jnp.int32)
+
+        # ---------------- phase 1: reload ----------------
+        rp = pending & running
+        spent = jnp.zeros(B, dtype=bool)
+        len_a, start_a = len0, start0
+        valid_a, col_a, nv_a = st.valid, col0, nv0
+        if k == 0:
+            valid_a = jnp.where(rp[:, None], st.alive, st.valid)
+            nv_a = jnp.where(rp, acnt, nv0)
+            col_a = jnp.where(rp, jnp.int32(0), col0)
+        elif ideal_lifo:
+            # pop every drained node at once (S12's idealized LIFO)
+            live_cnt = jnp.sum(st.lifo_mask & st.alive[:, None, :], axis=2)
+            pos_of = jnp.arange(k, dtype=jnp.int32)[None, :]
+            depth = pos_of - start0[:, None]
+            depth = jnp.where(depth < 0, depth + k, depth)     # slot -> depth
+            in_stack = depth < len0[:, None]
+            keep_lv = in_stack & (live_cnt > 0)
+            new_len = jnp.max(jnp.where(keep_lv, depth + 1, 0), axis=1)
+            has = new_len > 0
+            ti = ring_slot(start0, jnp.maximum(new_len - 1, 0), k)
+            live = take_level(st.lifo_mask, ti) & st.alive
+            live_n = take_level(live_cnt, ti)
+            valid_a = jnp.where(rp[:, None],
+                                jnp.where(has[:, None], live, st.alive),
+                                st.valid)
+            nv_a = jnp.where(rp, jnp.where(has, live_n, acnt), nv0)
+            col_a = jnp.where(rp & has, take_level(st.lifo_digit, ti),
+                              jnp.where(rp, jnp.int32(0), col0))
+            len_a = jnp.where(rp, new_len, len0)
+        else:
+            # actual hardware (S12): pop at most one drained node per cycle.
+            # The pop-target after a drained top is always the slot BELOW
+            # it, so both candidate liveness counts come from ONE packed
+            # reduction (top count in the low bits, below-top in the high
+            # bits — N < 2^15 keeps them from carrying into each other).
+            has0 = len0 > 0
+            t0 = ring_slot(start0, jnp.maximum(len0 - 1, 0), k)
+            tb = ring_slot(start0, jnp.maximum(len0 - 2, 0), k)
+            live_top = take_level(st.lifo_mask, t0) & st.alive
+            live_below = take_level(st.lifo_mask, tb) & st.alive
+            packed = jnp.sum(live_top.astype(jnp.int32)
+                             + (live_below.astype(jnp.int32) << 15), axis=-1)
+            cnt0 = packed & 0x7FFF
+            cntb = packed >> 15
+            drained0 = has0 & (cnt0 == 0)
+            len1 = jnp.where(drained0, len0 - 1, len0)
+            has1 = len1 > 0
+            live1 = jnp.where(drained0[:, None], live_below, live_top)
+            cnt1 = jnp.where(drained0, cntb, cnt0)
+            drained1 = has1 & (cnt1 == 0)
+            spent = rp & drained0 & drained1
+            ok = rp & ~spent
+            t1 = ring_slot(start0, jnp.maximum(len1 - 1, 0), k)
+            valid_a = jnp.where(ok[:, None],
+                                jnp.where(has1[:, None], live1, st.alive),
+                                st.valid)
+            nv_a = jnp.where(ok, jnp.where(has1, cnt1, acnt), nv0)
+            col_a = jnp.where(ok & has1, take_level(st.lifo_digit, t1),
+                              jnp.where(ok, jnp.int32(0), col0))
+            len_a = jnp.where(rp, len1, len0)
+        reload_cycles = st.sc[:, _RLC] + spent.astype(jnp.int32)
+        rp_after = jnp.where(rp, spent, pending)
+
+        # ---------------- phases 2-5 on active instances ----------------
+        act = running & ~spent
+        is_emit = act & (nv_a == 1)
+        is_rep = act & (nv_a != 1) & (col_a >= D)
+        is_dr = act & (nv_a != 1) & (col_a < D)
+
+        # digit read (computed once, applied where is_dr)
+        col_c = jnp.clip(col_a, 0, D - 1)
+        row = jnp.take_along_axis(digits, col_c[:, None, None],
+                                  axis=1)[:, 0, :]              # (B, N) u8
+        drs = st.sc[:, _DRS] + is_dr.astype(jnp.int32)
+        if level_bits == 1:
+            cnt1s = jnp.sum(valid_a & (row == 1), axis=-1)
+            mixed = (cnt1s > 0) & (cnt1s < nv_a)
+            exc = jnp.atleast_1d(_exclude_value(col_a, fmt, ascending,
+                                                neg_pending(st.alive)))
+            keep = valid_a & (row != exc.astype(row.dtype)[:, None])
+            nk = jnp.where(jnp.squeeze(exc) == 1, nv_a - cnt1s, cnt1s)
+            rec = col_a + 1          # binary tree: record NEXT column
+        else:
+            row32 = row.astype(jnp.int32)
+            dmin = jnp.min(jnp.where(valid_a, row32, BIG), axis=-1)
+            dmax = jnp.max(jnp.where(valid_a, row32, -BIG), axis=-1)
+            mixed = dmin != dmax
+            sel = dmin if ascending else dmax
+            keep = valid_a & (row32 == sel[:, None])
+            nk = jnp.sum(keep, axis=-1)
+            rec = col_a              # quad tree: record CURRENT column
+        change = is_dr & mixed
+
+        # state-record push into the ring (masked by ``change``)
+        lifo_mask_n, lifo_digit_n = st.lifo_mask, st.lifo_digit
+        len_n, start_n = len_a, start_a
+        if k > 0:
+            full = len_a >= k
+            # push slot = (start + len) % k; when full that IS the oldest
+            # slot, which drop-oldest overwrites (head then advances)
+            slot = ring_slot(start_a, len_a, k)
+            at_slot = (jnp.arange(k)[None, :] == slot[:, None]
+                       ) & change[:, None]                      # (B, k)
+            lifo_mask_n = jnp.where(at_slot[:, :, None],
+                                    valid_a[:, None, :], st.lifo_mask)
+            lifo_digit_n = jnp.where(at_slot, rec[:, None], st.lifo_digit)
+            start_n = jnp.where(change & full,
+                                ring_slot(start_a, jnp.int32(1), k), start_a)
+            len_n = jnp.where(change, jnp.minimum(len_a + 1, k), len_a)
+
+        valid_b = jnp.where(change[:, None], keep, valid_a)
+        nv2 = jnp.where(change, nk, nv_a)
+        at_lsb = col_a == D - 1
+        dr_emit = is_dr & (nv2 == 1)
+        dr_rep = is_dr & (nv2 != 1) & at_lsb
+        dr_desc = is_dr & (nv2 != 1) & ~at_lsb
+
+        # emission (phase 2 emits the lone survivor; phase 3 the first of
+        # the repeat set — in both cases the first True of valid_b)
+        emit_all = is_emit | dr_emit
+        emit_first = is_rep | dr_rep
+        emit = emit_all | emit_first
+        idx = jnp.argmax(valid_b, axis=-1).astype(jnp.int32)
+        onehot = (iota_n[None, :] == idx[:, None]) & emit[:, None]
+        rank = jnp.where(onehot, out0[:, None], st.rank)
+        out_cnt = out0 + emit.astype(jnp.int32)
+        alive_n = st.alive & ~onehot
+        alive_cnt_n = acnt - emit.astype(jnp.int32)
+        valid_c = valid_b & ~onehot
+        nv_c = nv2 - emit.astype(jnp.int32)
+
+        # next-cycle reload requests (valid ⊆ alive makes both counts)
+        rp_all = (acnt - nv2) > 0                               # phase 2
+        rp_first = (nv_c == 0) & (alive_cnt_n > 0)              # phase 3
+        rp_new = jnp.where(emit_all, rp_all,
+                           jnp.where(emit_first, rp_first, rp_after))
+        col_n = jnp.where(dr_desc, col_a + 1,
+                          jnp.where(dr_rep, jnp.int32(D), col_a))
+
+        sc = jnp.stack([col_n, start_n, len_n, rp_new.astype(jnp.int32),
+                        out_cnt, cycles, drs, reload_cycles,
+                        alive_cnt_n, nv_c], axis=1)
+        return BatchCarry(alive=alive_n, valid=valid_c,
+                          lifo_mask=lifo_mask_n, lifo_digit=lifo_digit_n,
+                          rank=rank, sc=sc)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Bit-parallel batched machine (level_bits == 1): the software image of the
+# binary 1T1R array taken literally.  All N-wide boolean state — digit
+# planes, the alive/valid masks, the k-LIFO status records — lives as
+# packed uint32 words (32 cells per word), the all-0's/all-1's periphery
+# becomes ``lax.population_count``, and number selection becomes a
+# count-trailing-zeros bit trick.  One controller cycle touches (B, N/32)
+# words instead of (B, N) lanes, which is what makes the batched engine
+# memory-thin enough to be dispatch-bound rather than bandwidth-bound.
+# ---------------------------------------------------------------------------
+
+
+class PackedCarry(NamedTuple):
+    alive: jnp.ndarray          # (B, Wd) uint32 bit-packed
+    valid: jnp.ndarray          # (B, Wd) uint32, subset of alive
+    lifo_mask: jnp.ndarray      # (B, k, Wd) uint32 ring buffer
+    lifo_digit: jnp.ndarray     # (B, k) int32
+    rank: jnp.ndarray           # (B, N) int32 emission position, -1 if none
+    sc: jnp.ndarray             # (B, 10) int32 packed controller registers
+
+
+def _pack_bits(m: jnp.ndarray) -> jnp.ndarray:
+    """(..., N) bool -> (..., ceil(N/32)) uint32; bit j of word w is
+    element w*32+j."""
+    n = m.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        m = jnp.concatenate(
+            [m, jnp.zeros(m.shape[:-1] + (pad,), m.dtype)], axis=-1)
+    w = m.shape[-1] // 32
+    m = m.reshape(m.shape[:-1] + (w, 32)).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _popc(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def _make_packed_step(digitsW, signW, fmt, ascending, stop_n, n_real):
+    B, D, Wd = digitsW.shape
+    iota_n = jnp.arange(n_real, dtype=jnp.int32)
+    iota_w = jnp.arange(Wd, dtype=jnp.int32)
+
+    def neg_pending(aliveW):
+        if signW is None:
+            return jnp.zeros(B, dtype=bool)
+        s = signW if ascending else ~signW
+        # padding bits are never alive, so ~signW's pad bits are harmless
+        return jnp.sum(_popc(aliveW & s), axis=-1) > 0
+
+    def ring_slot(start, i, k):
+        return jnp.where(start + i >= k, start + i - k, start + i)
+
+    def take_level(stack, ti):
+        k = stack.shape[1]
+        out = stack[:, 0]
+        for i in range(1, k):
+            hit = ti == i
+            hit = hit.reshape(hit.shape + (1,) * (out.ndim - 1))
+            out = jnp.where(hit, stack[:, i], out)
+        return out
+
+    def count(m):                                        # (B, Wd) -> (B,)
+        return jnp.sum(_popc(m), axis=-1)
+
+    def first_index(m):
+        """Lowest set bit position across the word row (first valid cell).
+        ctz(word) = popcount((w & -w) - 1); all-zero rows return garbage,
+        masked by ``emit`` downstream."""
+        nz = m != 0
+        word = jnp.argmax(nz, axis=-1).astype(jnp.int32)          # (B,)
+        w = jnp.take_along_axis(m, word[:, None].astype(jnp.int32),
+                                axis=-1)[:, 0]
+        ctz = _popc((w & (~w + jnp.uint32(1))) - jnp.uint32(1))
+        return word * 32 + ctz
+
+    def step(st: PackedCarry) -> PackedCarry:
+        k = st.lifo_mask.shape[1]
+        col0 = st.sc[:, _COL]
+        start0 = st.sc[:, _START]
+        len0 = st.sc[:, _LEN]
+        pending = st.sc[:, _RP] > 0
+        out0 = st.sc[:, _OUT]
+        acnt = st.sc[:, _ACNT]
+        nv0 = st.sc[:, _NV]
+        running = out0 < stop_n
+        cycles = st.sc[:, _CYC] + running.astype(jnp.int32)
+
+        # ---------------- phase 1: reload ----------------
+        rp = pending & running
+        spent = jnp.zeros(B, dtype=bool)
+        len_a, start_a = len0, start0
+        valid_a, col_a, nv_a = st.valid, col0, nv0
+        if k == 0:
+            valid_a = jnp.where(rp[:, None], st.alive, st.valid)
+            nv_a = jnp.where(rp, acnt, nv0)
+            col_a = jnp.where(rp, jnp.int32(0), col0)
+        else:
+            has0 = len0 > 0
+            t0 = ring_slot(start0, jnp.maximum(len0 - 1, 0), k)
+            tb = ring_slot(start0, jnp.maximum(len0 - 2, 0), k)
+            live_top = take_level(st.lifo_mask, t0) & st.alive
+            live_below = take_level(st.lifo_mask, tb) & st.alive
+            packed = jnp.sum(_popc(live_top)
+                             + (_popc(live_below) << 15), axis=-1)
+            cnt0 = packed & 0x7FFF
+            cntb = packed >> 15
+            drained0 = has0 & (cnt0 == 0)
+            len1 = jnp.where(drained0, len0 - 1, len0)
+            has1 = len1 > 0
+            live1 = jnp.where(drained0[:, None], live_below, live_top)
+            cnt1 = jnp.where(drained0, cntb, cnt0)
+            drained1 = has1 & (cnt1 == 0)
+            spent = rp & drained0 & drained1
+            ok = rp & ~spent
+            t1 = ring_slot(start0, jnp.maximum(len1 - 1, 0), k)
+            valid_a = jnp.where(ok[:, None],
+                                jnp.where(has1[:, None], live1, st.alive),
+                                st.valid)
+            nv_a = jnp.where(ok, jnp.where(has1, cnt1, acnt), nv0)
+            col_a = jnp.where(ok & has1, take_level(st.lifo_digit, t1),
+                              jnp.where(ok, jnp.int32(0), col0))
+            len_a = jnp.where(rp, len1, len0)
+        reload_cycles = st.sc[:, _RLC] + spent.astype(jnp.int32)
+        rp_after = jnp.where(rp, spent, pending)
+
+        # ---------------- phases 2-5 ----------------
+        act = running & ~spent
+        is_emit = act & (nv_a == 1)
+        is_rep = act & (nv_a != 1) & (col_a >= D)
+        is_dr = act & (nv_a != 1) & (col_a < D)
+
+        col_c = jnp.clip(col_a, 0, D - 1)
+        row = jnp.take_along_axis(digitsW, col_c[:, None, None],
+                                  axis=1)[:, 0, :]          # (B, Wd) u32
+        drs = st.sc[:, _DRS] + is_dr.astype(jnp.int32)
+        cnt1s = count(valid_a & row)
+        mixed = (cnt1s > 0) & (cnt1s < nv_a)
+        exc1 = _exclude_bit(col_a, fmt, ascending, neg_pending(st.alive))
+        # keep cells whose digit != excluded value: XOR flips the plane
+        # when the excluded digit is 1
+        keep = valid_a & jnp.where(exc1[:, None], ~row, row)
+        nk = jnp.where(exc1, nv_a - cnt1s, cnt1s)
+        rec = col_a + 1
+        change = is_dr & mixed
+
+        lifo_mask_n, lifo_digit_n = st.lifo_mask, st.lifo_digit
+        len_n, start_n = len_a, start_a
+        if k > 0:
+            full = len_a >= k
+            slot = ring_slot(start_a, len_a, k)
+            at_slot = (jnp.arange(k)[None, :] == slot[:, None]
+                       ) & change[:, None]
+            lifo_mask_n = jnp.where(at_slot[:, :, None],
+                                    valid_a[:, None, :], st.lifo_mask)
+            lifo_digit_n = jnp.where(at_slot, rec[:, None], st.lifo_digit)
+            start_n = jnp.where(change & full,
+                                ring_slot(start_a, jnp.int32(1), k), start_a)
+            len_n = jnp.where(change, jnp.minimum(len_a + 1, k), len_a)
+
+        valid_b = jnp.where(change[:, None], keep, valid_a)
+        nv2 = jnp.where(change, nk, nv_a)
+        at_lsb = col_a == D - 1
+        dr_emit = is_dr & (nv2 == 1)
+        dr_rep = is_dr & (nv2 != 1) & at_lsb
+        dr_desc = is_dr & (nv2 != 1) & ~at_lsb
+
+        emit_all = is_emit | dr_emit
+        emit_first = is_rep | dr_rep
+        emit = emit_all | emit_first
+        idx = first_index(valid_b)
+        # clear bit idx from alive/valid where emitting
+        bitmask = jnp.where((iota_w[None, :] == (idx // 32)[:, None]) &
+                            emit[:, None],
+                            jnp.uint32(1) << (idx % 32).astype(jnp.uint32
+                                                               )[:, None],
+                            jnp.uint32(0))
+        rank = jnp.where((iota_n[None, :] == idx[:, None]) & emit[:, None],
+                         out0[:, None], st.rank)
+        out_cnt = out0 + emit.astype(jnp.int32)
+        alive_n = st.alive & ~bitmask
+        alive_cnt_n = acnt - emit.astype(jnp.int32)
+        valid_c = valid_b & ~bitmask
+        nv_c = nv2 - emit.astype(jnp.int32)
+
+        rp_all = (acnt - nv2) > 0
+        rp_first = (nv_c == 0) & (alive_cnt_n > 0)
+        rp_new = jnp.where(emit_all, rp_all,
+                           jnp.where(emit_first, rp_first, rp_after))
+        col_n = jnp.where(dr_desc, col_a + 1,
+                          jnp.where(dr_rep, jnp.int32(D), col_a))
+
+        sc = jnp.stack([col_n, start_n, len_n, rp_new.astype(jnp.int32),
+                        out_cnt, cycles, drs, reload_cycles,
+                        alive_cnt_n, nv_c], axis=1)
+        return PackedCarry(alive=alive_n, valid=valid_c,
+                           lifo_mask=lifo_mask_n, lifo_digit=lifo_digit_n,
+                           rank=rank, sc=sc)
+
+    return step
+
+
+def _exclude_bit(col, fmt: str, ascending: bool, neg_pending):
+    """Boolean form of :func:`_exclude_value` for the packed machine."""
+    exc = jnp.atleast_1d(_exclude_value(col, fmt, ascending, neg_pending))
+    return jnp.broadcast_to(exc == 1, col.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "fmt", "ascending", "level_bits", "ideal_lifo",
+                     "stop_after", "unroll"))
+def tns_sort_planes_batched(digits: jnp.ndarray,
+                            sign_bits: Optional[jnp.ndarray] = None,
+                            *, k: int, fmt: str = bp.UNSIGNED,
+                            ascending: bool = True, level_bits: int = 1,
+                            ideal_lifo: bool = False,
+                            stop_after: Optional[int] = None,
+                            unroll: int = 2) -> TnsOut:
+    """Run TNS on a (B, D, N) batch of digit-plane matrices in ONE compiled
+    dispatch — B independent banks stepping their controllers in lockstep
+    (the serving-path layout: one request per bank).  Per-instance cycle /
+    DR / reload counts are identical to :func:`tns_sort_planes`; finished
+    instances freeze while stragglers drain.  All ``TnsOut`` fields gain a
+    leading B axis.  ``unroll`` controller cycles execute per while-loop
+    trip (amortizing fixed per-trip cost; has no semantic effect)."""
+    assert level_bits <= 8, "batched machine stores digits as uint8"
+    B, D, N = digits.shape
+    # both batched machines pack two liveness counts into one int32 with a
+    # 15-bit shift — the counts must not carry into each other
+    assert N < (1 << 15), "batched machine supports N < 32768 per bank"
+    stop_n = N if stop_after is None else min(stop_after, N)
+    kk = max(k, 0)
+    sc0 = jnp.zeros((B, 10), dtype=jnp.int32)
+    sc0 = sc0.at[:, _ACNT].set(N).at[:, _NV].set(N)
+    limit = jnp.int32(4 * N * D + 64)
+
+    if level_bits == 1 and not ideal_lifo:
+        # bit-parallel fast path: the binary 1T1R array as packed words
+        digitsW = _pack_bits(digits.astype(bool))
+        signW = None if sign_bits is None else _pack_bits(sign_bits)
+        Wd = digitsW.shape[-1]
+        init = PackedCarry(
+            alive=_pack_bits(jnp.ones((B, N), dtype=bool)),
+            valid=_pack_bits(jnp.ones((B, N), dtype=bool)),
+            lifo_mask=jnp.zeros((B, kk, Wd), dtype=jnp.uint32),
+            lifo_digit=jnp.zeros((B, kk), dtype=jnp.int32),
+            rank=jnp.full((B, N), -1, dtype=jnp.int32),
+            sc=sc0,
+        )
+        step = _make_packed_step(digitsW, signW, fmt, ascending, stop_n, N)
+    else:
+        init = BatchCarry(
+            alive=jnp.ones((B, N), dtype=bool),
+            valid=jnp.ones((B, N), dtype=bool),
+            lifo_mask=jnp.zeros((B, kk, N), dtype=bool),
+            lifo_digit=jnp.zeros((B, kk), dtype=jnp.int32),
+            rank=jnp.full((B, N), -1, dtype=jnp.int32),
+            sc=sc0,
+        )
+        step = _make_batched_step(digits.astype(jnp.uint8), sign_bits, fmt,
+                                  ascending, level_bits, ideal_lifo, stop_n)
+
+    def body(st):
+        for _ in range(max(1, unroll)):
+            st = step(st)
+        return st
+
+    def cond(st):
+        return jnp.any((st.sc[:, _OUT] < stop_n) & (st.sc[:, _CYC] < limit))
+
+    final = jax.lax.while_loop(cond, body, init)
+    # rank -> perm: perm[b, rank[b, i]] = i (unemitted entries stay -1,
+    # routed to a scratch column that is sliced away)
+    src = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    tgt = jnp.where(final.rank >= 0, final.rank, N)
+    perm = jnp.full((B, N + 1), -1, dtype=jnp.int32)
+    perm = perm.at[jnp.arange(B)[:, None], tgt].set(src)[:, :N]
+    return TnsOut(perm, final.sc[:, _CYC], final.sc[:, _DRS],
+                  final.sc[:, _RLC])
+
+
+def tns_sort_batch(values, width: int, k: int, fmt: str = bp.UNSIGNED,
+                   ascending: bool = True, level_bits: int = 1,
+                   ideal_lifo: bool = False,
+                   stop_after: Optional[int] = None) -> TnsOut:
+    """Encode a (B, N) batch of datasets and run the batched machine."""
+    x = np.asarray(values)
+    assert x.ndim == 2, "tns_sort_batch expects a (B, N) batch"
+    if level_bits == 1:
+        digits = bp.to_bitplanes(x, width, fmt)
+    else:
+        digits = bp.to_digitplanes(x, width, fmt, level_bits)
+    sign = None
+    if fmt in (bp.SIGNMAG, bp.FLOAT):
+        sign = jnp.asarray(bp.sign_plane(x, width, fmt))
+    return tns_sort_planes_batched(
+        jnp.asarray(digits.astype(np.int32)), sign, k=k, fmt=fmt,
+        ascending=ascending, level_bits=level_bits, ideal_lifo=ideal_lifo,
+        stop_after=stop_after)

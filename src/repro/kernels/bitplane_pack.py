@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import backend
+
 
 def _pack_f32_kernel(x_ref, o_ref):
     x = x_ref[...]
@@ -55,8 +57,9 @@ def _blocked_elementwise(kernel, x, out_dtype, block=(256, 512),
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def pack_keys(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def pack_keys(x: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
     """Order-preserving uint32 keys for float32/bfloat16/int32 input."""
+    interpret = backend.use_interpret(interpret)
     if x.dtype == jnp.bfloat16:
         x = x.astype(jnp.float32)          # bf16 embeds exactly in f32
     if x.dtype == jnp.float32:
@@ -71,7 +74,8 @@ def pack_keys(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def unpack_keys_f32(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def unpack_keys_f32(keys: jnp.ndarray,
+                    interpret: bool | None = None) -> jnp.ndarray:
     """Inverse of ``pack_keys`` for float32."""
     return _blocked_elementwise(_unpack_f32_kernel, keys, jnp.float32,
-                                interpret=interpret)
+                                interpret=backend.use_interpret(interpret))

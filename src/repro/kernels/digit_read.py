@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import backend
+
 
 def _dr_kernel(planes_ref, mask_ref, drs_ref, *, width: int, n_valid: int,
                ascending: bool):
@@ -43,11 +45,14 @@ def _dr_kernel(planes_ref, mask_ref, drs_ref, *, width: int, n_valid: int,
 
 @functools.partial(jax.jit, static_argnames=("ascending", "interpret"))
 def min_search(planes: jnp.ndarray, ascending: bool = True,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """(min_mask, useful_drs) for batched bit-planes (B, W, N) uint8.
 
     ``min_mask[b]`` marks every element attaining the min (max when
-    ``ascending=False``) — the survival numbers of one search iteration."""
+    ``ascending=False``) — the survival numbers of one search iteration.
+    ``interpret=None`` resolves per backend (compiled on TPU, interpret
+    on CPU)."""
+    interpret = backend.use_interpret(interpret)
     assert planes.ndim == 3 and planes.dtype == jnp.uint8
     b, w, n = planes.shape
     n_pad = max(128, -(-n // 128) * 128)

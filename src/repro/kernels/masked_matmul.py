@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
+
 
 def _mm_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -43,10 +45,11 @@ def _pad_to(a: int, b: int) -> int:
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def pruned_matmul(x: jnp.ndarray, w: jnp.ndarray, keep_mask: jnp.ndarray,
                   bm: int = 128, bn: int = 128, bk: int = 128,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool | None = None) -> jnp.ndarray:
     """``(x * keep_mask) @ w`` — x: (M, K), w: (K, N), keep_mask: (K,) bool.
 
     ``keep_mask`` is the complement of the TNS-located prune set."""
+    interpret = backend.use_interpret(interpret)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and keep_mask.shape == (k,)

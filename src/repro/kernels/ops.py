@@ -1,9 +1,11 @@
 """Public jit'd entry points for the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only (the
-kernels target TPU; interpret mode executes the kernel body in Python for
-correctness validation).  On a real TPU deployment set
-``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
+Dispatch is backend-aware (:mod:`repro.kernels.backend`): compiled Pallas
+on TPU/GPU, interpret mode on CPU (the kernel body executes in Python for
+correctness validation), and a pure-jnp oracle fallback
+(:mod:`repro.kernels.ref`) when ``REPRO_PALLAS=jnp`` — for environments
+where Pallas itself is unusable.  Pass ``interpret=`` explicitly to
+override per call.
 
 Each op has a pure-jnp oracle in :mod:`repro.kernels.ref` and a sweep test
 in tests/test_kernels.py asserting allclose across shapes and dtypes.
@@ -13,19 +15,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitplane as bp
+from repro.kernels import backend
 from repro.kernels import bitplane_pack as _pack
 from repro.kernels import digit_read as _dr
 from repro.kernels import masked_matmul as _mm
 from repro.kernels import radix_topk as _topk
 
-INTERPRET = True
-
 
 def topk(x: jnp.ndarray, k: int, r: int = 4, interpret: bool | None = None):
     """Comparison-free top-k (largest) along the last axis for 2D float
     inputs: (values desc, indices).  The MoE-router kernel."""
-    interpret = INTERPRET if interpret is None else interpret
+    if backend.use_ref(interpret):
+        from repro.kernels import ref
+        keys = ref.pack_keys_ref(x)
+        _, idx = ref.topk_keys_ref(~keys, k)
+        return jnp.take_along_axis(x, idx, axis=-1), idx
+    # resolve interpret HERE (not inside the jitted kernels) so the
+    # concrete bool is the jit cache key — mode switches via
+    # REPRO_PALLAS + backend.reset() then take effect even for shapes
+    # that were already traced under the other mode
+    interpret = backend.use_interpret(interpret)
     keys = _pack.pack_keys(x, interpret=interpret)
     inv = ~keys                      # largest value == smallest inverted key
     mkeys, idx = _topk.topk_keys(inv, k, r=r, interpret=interpret)
@@ -36,21 +45,33 @@ def topk(x: jnp.ndarray, k: int, r: int = 4, interpret: bool | None = None):
 def min_search(planes: jnp.ndarray, ascending: bool = True,
                interpret: bool | None = None):
     """One DR min/max-search over (B, W, N) uint8 bit-planes."""
-    interpret = INTERPRET if interpret is None else interpret
+    if backend.use_ref(interpret):
+        from repro.kernels import ref
+        return ref.min_search_ref(planes, ascending=ascending)
+    interpret = backend.use_interpret(interpret)
     return _dr.min_search(planes, ascending=ascending, interpret=interpret)
 
 
 def pack_keys(x: jnp.ndarray, interpret: bool | None = None):
-    interpret = INTERPRET if interpret is None else interpret
+    if backend.use_ref(interpret):
+        from repro.kernels import ref
+        return ref.pack_keys_ref(x)
+    interpret = backend.use_interpret(interpret)
     return _pack.pack_keys(x, interpret=interpret)
 
 
 def unpack_keys_f32(keys: jnp.ndarray, interpret: bool | None = None):
-    interpret = INTERPRET if interpret is None else interpret
+    if backend.use_ref(interpret):
+        from repro.kernels import ref
+        return ref.unpack_keys_f32_ref(keys)
+    interpret = backend.use_interpret(interpret)
     return _pack.unpack_keys_f32(keys, interpret=interpret)
 
 
 def pruned_matmul(x: jnp.ndarray, w: jnp.ndarray, keep_mask: jnp.ndarray,
                   interpret: bool | None = None, **tiles):
-    interpret = INTERPRET if interpret is None else interpret
+    if backend.use_ref(interpret):
+        from repro.kernels import ref
+        return ref.pruned_matmul_ref(x, w, keep_mask)
+    interpret = backend.use_interpret(interpret)
     return _mm.pruned_matmul(x, w, keep_mask, interpret=interpret, **tiles)

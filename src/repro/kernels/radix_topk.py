@@ -21,10 +21,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import backend
+
 KEY_BITS = 32
-SENTINEL = jnp.uint32(0xFFFFFFFF)
+# NOTE: numpy, not jnp — this module may be lazily imported inside a jit
+# trace, and a module-level jnp constant created there would capture (and
+# later leak) a tracer
+SENTINEL = np.uint32(0xFFFFFFFF)
 
 
 def _topk_kernel(keys_ref, idx_ref, key_ref, *, k: int, r: int, n_valid: int):
@@ -60,9 +66,11 @@ def _pad_lanes(n: int) -> int:
 @functools.partial(jax.jit, static_argnames=("k", "r", "block_rows",
                                              "interpret"))
 def topk_keys(keys: jnp.ndarray, k: int, r: int = 4, block_rows: int = 8,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """(min_keys, indices) of the k smallest along the last axis (ascending
-    emission), for uint32 keys of shape (B, N)."""
+    emission), for uint32 keys of shape (B, N).  ``interpret=None``
+    resolves per backend."""
+    interpret = backend.use_interpret(interpret)
     assert keys.dtype == jnp.uint32 and keys.ndim == 2
     b, n = keys.shape
     n_pad = _pad_lanes(n)

@@ -134,7 +134,11 @@ def hlo_byte_profile(hlo_text: str, top: int = 15) -> list:
     return [(op, int(b), cnt[op]) for op, b in rows]
 
 
-def cost_value(cost: Optional[dict], key: str) -> float:
+def cost_value(cost, key: str) -> float:
+    # older JAX returns cost_analysis() as a one-dict-per-program list,
+    # newer JAX as a flat dict — accept both
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     if not cost:
         return 0.0
     return float(cost.get(key, 0.0))

@@ -1,9 +1,11 @@
 """Serving driver: batched prefill + decode with the paper's technique in
-the loop (comparison-free top-k sampling, optional in-situ pruning masks).
+the loop (comparison-free top-k sampling via the sort-engine facade,
+engine-selectable MoE routing, optional in-situ pruning masks).
 
 Usage (example scale):
     PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b \
-        --batch 4 --prompt-len 16 --max-new 32 --top-k 32 --prune 0.3
+        --batch 4 --prompt-len 16 --max-new 32 --top-k 32 --prune 0.3 \
+        --router-impl radix
 """
 from __future__ import annotations
 
@@ -17,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro import sort as sort_engine
 from repro.data import pipeline as dp
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as sh
@@ -98,9 +101,22 @@ def main():
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--vocab", type=int, default=1024)
     ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--router-impl", default=None,
+                    choices=sort_engine.TOPK_ENGINES,
+                    help="MoE routing top-k engine (default: the arch "
+                         "config's choice)")
+    ap.add_argument("--list-engines", action="store_true",
+                    help="print the sort-engine registry and exit")
     args = ap.parse_args()
 
+    if args.list_engines:
+        for name, spec in sorted(sort_engine.engines().items()):
+            print(f"{name:12s} [{spec.mode:10s}] {spec.description}")
+        return
+
     cfg = configs.get_config(args.arch)
+    if args.router_impl:
+        cfg = dataclasses.replace(cfg, router_impl=args.router_impl)
     if not args.full_size:
         cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model,
                           vocab=args.vocab)

@@ -44,6 +44,11 @@ class ArchConfig:
     moe_top_k: int = 0
     d_ff_expert: int = 0
     moe_layer_start: int = 0          # dense layers before the first MoE one
+    # expert-capacity factor for the dispatch buffers; None => no-drop
+    # capacity (C >= n_tokens), which makes batched forward bit-match the
+    # token-by-token decode path (drops are a throughput knob, not part of
+    # the paper's technique)
+    moe_capacity_factor: Optional[float] = 1.25
     # MLA (DeepSeek-V2)
     q_lora_rank: int = 0
     kv_lora_rank: int = 0
@@ -122,6 +127,10 @@ class ArchConfig:
             n_routed_experts=min(8, self.n_routed_experts),
             n_shared_experts=min(1, self.n_shared_experts),
             moe_top_k=min(2, self.moe_top_k),
+            # smoke configs route with random-init params, which
+            # concentrates load: disable capacity drops so the decode
+            # path reproduces the forward path exactly
+            moe_capacity_factor=None,
             d_ff_expert=64 if self.d_ff_expert else 0,
             q_lora_rank=32 if self.q_lora_rank else 0,
             kv_lora_rank=16 if self.kv_lora_rank else 0,

@@ -3,10 +3,10 @@
 Two places the sort-in-memory technique is first-class here:
 
 * **Routing top-k** (DeepSeek-V2: top-6 of 160; Qwen2-MoE: top-4 of 60) runs
-  on :func:`repro.core.radix_select.topk_values` — iterated digit-plane min
-  search (the multi-level DR strategy), not ``jax.lax.top_k``.  Set
-  ``router_impl='lax'`` in the config for the comparison-based baseline the
-  paper compares against.
+  on :func:`repro.sort.topk` — the engine-registry dispatcher over the
+  paper's digit-plane min search.  ``router_impl`` in the config picks the
+  engine: ``'radix'`` (vectorized digit reads), ``'pallas'`` (fused kernel),
+  or ``'lax'`` for the comparison-based baseline the paper compares against.
 
 * **Dispatch** orders (token, expert) pairs with the comparison-free LSB
   radix sort (:func:`radix_select.radix_sort_keys`) and scatters into a
@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sort as sort_engine
 from repro.core import radix_select as rs
 from repro.models import shard
 from repro.models.config import ArchConfig
@@ -47,23 +48,31 @@ def init_moe(cfg: ArchConfig, key) -> Dict:
 
 def route_topk(logits: jnp.ndarray, k: int, impl: str
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(gates, expert_idx): top-k softmax gates over expert logits (T, E)."""
-    if impl == "radix":
-        vals, idx = rs.topk_values(logits, k, r=4)
-    else:
-        vals, idx = jax.lax.top_k(logits, k)
+    """(gates, expert_idx): top-k softmax gates over expert logits (T, E).
+    ``impl`` names a :data:`repro.sort.TOPK_ENGINES` engine."""
+    vals, idx = sort_engine.topk(logits, k, engine=impl)
     gates = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
     return gates, idx
 
 
 def _capacity(n_tokens: int, k: int, n_experts: int,
-              factor: float = 1.25) -> int:
-    c = int(np.ceil(n_tokens * k / n_experts * factor))
+              factor: Optional[float] = 1.25) -> int:
+    """Expert buffer slots.  ``factor=None`` => the no-drop bound: a top-k
+    router assigns each token to an expert at most once, so C = n_tokens
+    guarantees no assignment is ever truncated (used by the smoke configs,
+    whose decode path must bit-match the batched forward path)."""
+    if factor is None:
+        c = n_tokens
+    else:
+        c = int(np.ceil(n_tokens * k / n_experts * factor))
     return max(8, -(-c // 8) * 8)
 
 
+_USE_CFG = object()   # default: take the capacity factor from the config
+
+
 def apply_moe(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
-              capacity_factor: float = 1.25,
+              capacity_factor=_USE_CFG,
               dispatch: str = "einsum") -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, T, d).  Returns (y, aux_loss).
 
@@ -76,6 +85,8 @@ def apply_moe(params: Dict, x: jnp.ndarray, cfg: ArchConfig,
     capacity, deterministic truncation) — great single-device semantics,
     scatter-based so only used off the production path.
     """
+    if capacity_factor is _USE_CFG:
+        capacity_factor = cfg.moe_capacity_factor
     B, T, d = x.shape
     E, k = cfg.n_routed_experts, cfg.moe_top_k
     logits = (x.astype(jnp.float32) @ params["router"])           # (B, T, E)

@@ -1,8 +1,9 @@
 """Decode loop + comparison-free top-k sampling.
 
-Top-k logit filtering uses the histogram radix-select mask
-(:func:`repro.core.radix_select.topk_logits_mask`) — the paper's digit-read
-selection applied at the vocab scale — instead of a comparison sort.
+Top-k logit filtering goes through the sort-engine facade
+(:func:`repro.sort.topk_mask` — histogram radix-select, the paper's
+digit-read selection applied at the vocab scale) instead of a comparison
+sort.
 """
 from __future__ import annotations
 
@@ -12,19 +13,21 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import radix_select as rs
+from repro import sort as sort_engine
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 
 
 def sample_logits(logits: jnp.ndarray, key, top_k: int = 0,
                   temperature: float = 1.0) -> jnp.ndarray:
-    """logits: (B, V) -> token ids (B,)."""
+    """logits: (B, V) -> token ids (B,).  ``top_k`` is a static Python int
+    (0 disables filtering); callers that need a run-time tunable k should
+    call :func:`repro.sort.topk_mask` directly, which supports traced k."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lg = logits.astype(jnp.float32) / temperature
     if top_k:
-        mask = rs.topk_logits_mask(lg, top_k)
+        mask = sort_engine.topk_mask(lg, top_k, largest=True)
         lg = jnp.where(mask, lg, -1e30)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 

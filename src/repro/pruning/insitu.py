@@ -26,10 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sort as sort_engine
 from repro.core import bitplane as bp
 from repro.core import device_model as dm
-from repro.core import radix_select as rs
-from repro.core import tns as jt
 from repro.models.config import ArchConfig
 
 
@@ -45,7 +44,7 @@ def lane_keep_mask(wi: jnp.ndarray, rate) -> jnp.ndarray:
     d = wi.shape[-2]
     k = jnp.round(jnp.asarray(rate) * d).astype(jnp.int32)
     flat = scores.reshape(-1, d)
-    pruned = jax.vmap(lambda s: rs.prune_smallest_mask(s, k))(flat)
+    pruned = jax.vmap(lambda s: sort_engine.prune_mask(s, k))(flat)
     return ~pruned.reshape(scores.shape)
 
 
@@ -92,18 +91,21 @@ def quantize_8bit_signmag(w: np.ndarray) -> np.ndarray:
 
 
 def tns_prune(weights: np.ndarray, rate: float, k: int = 2,
-              ber: float = 0.0, seed: int = 0):
-    """Locate the p% smallest |weights| with the cycle-faithful TNS engine
-    (sorting |w| as unsigned magnitudes, ascending), optionally under
-    device bit errors.  Returns (indices, cycles, drs)."""
+              ber: float = 0.0, seed: int = 0, engine: str = "tns"):
+    """Locate the p% smallest |weights| with a cycle-faithful engine from
+    the sort registry (sorting |w| as unsigned magnitudes, ascending),
+    optionally under device bit errors.  Returns (indices, cycles, drs)."""
     q = quantize_8bit_signmag(np.asarray(weights).reshape(-1))
     mag = np.abs(q)
     n = mag.shape[0]
     m = int(round(rate * n))
-    planes = bp.to_bitplanes(mag, 8, bp.UNSIGNED)
     if ber > 0:
-        planes = dm.apply_ber(planes, ber, seed=seed)
-    out = jt.tns_sort_planes(jnp.asarray(planes.astype(np.int32)), None,
-                             k=k, fmt=bp.UNSIGNED, stop_after=m)
-    idx = np.asarray(out.perm)[:m]
-    return idx, int(out.cycles), int(out.drs)
+        # program the array, flip bits at the device BER, read back the
+        # (possibly corrupted) dataset the controller will actually see
+        planes = dm.apply_ber(bp.to_bitplanes(mag, 8, bp.UNSIGNED), ber,
+                              seed=seed)
+        mag = bp.from_bitplanes(planes, bp.UNSIGNED)
+    res = sort_engine.sort(mag.astype(np.uint8), engine=engine, width=8,
+                           fmt=bp.UNSIGNED, k=k, stop_after=m)
+    return (np.asarray(res.indices), int(np.asarray(res.cycles)),
+            int(np.asarray(res.drs)))

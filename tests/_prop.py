@@ -1,0 +1,111 @@
+"""Offline-safe property-testing shim.
+
+The tier-1 suite uses hypothesis-style property tests (`@given` over
+strategies).  This container has no network access, so hypothesis may be
+absent; importing it at module scope would fail collection for four tier-1
+modules.  This shim re-exports the real hypothesis when importable and
+otherwise degrades to a deterministic seeded-random example generator with
+the same decorator surface:
+
+    from _prop import given, settings, st
+
+    @given(st.lists(st.integers(0, 255), min_size=16, max_size=16),
+           st.sampled_from([1, 2, 4]))
+    @settings(max_examples=25, deadline=None)
+    def test_foo(data, k): ...
+
+The fallback supports the strategy subset the suite uses — ``integers``,
+``floats``, ``booleans``, ``lists``, ``sampled_from`` — and draws
+``max_examples`` examples per test from an RNG seeded by the test name, so
+failures reproduce run-to-run.  It does not shrink; when a case fails, the
+raw drawn arguments are attached to the assertion via exception notes.
+"""
+from __future__ import annotations
+
+
+
+try:  # pragma: no cover - depends on environment
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "random.Random"):
+            return self._draw(rng)
+
+    class _Strategies:
+        """Seeded-random stand-ins for the strategies the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=True, allow_infinity=None,
+                   width=64):
+            def draw(rng):
+                v = rng.uniform(min_value, max_value)
+                if width == 16:
+                    import numpy as np
+                    v = float(np.float16(v))
+                elif width == 32:
+                    import numpy as np
+                    v = float(np.float32(v))
+                return v
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would make
+            # pytest introspect the inner signature and demand fixtures
+            # for the strategy-provided parameters.
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_prop_max_examples", 20)
+                # crc32, not hash(): str hash is salted per process, which
+                # would break run-to-run reproducibility of drawn examples
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:  # surface the failing example
+                        if hasattr(e, "add_note"):  # py3.11+
+                            e.add_note(f"_prop example #{i}: {drawn!r}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

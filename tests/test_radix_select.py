@@ -1,7 +1,7 @@
 """Throughput-mode comparison-free selection vs. lax references."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax
 import jax.numpy as jnp

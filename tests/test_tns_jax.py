@@ -1,7 +1,7 @@
 """JAX TNS engine must be cycle-for-cycle identical to the Python oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 

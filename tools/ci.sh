@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite on CPU + a fast smoke pass over the
+# sort-engine registry.  Mirrors .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS=cpu
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== sort-engine registry smoke =="
+python -m benchmarks.run --smoke
