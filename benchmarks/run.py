@@ -74,27 +74,96 @@ def smoke() -> int:
     return 0
 
 
+def smoke_faults() -> int:
+    """Fault-injection CI lane: zero-fault parity of every resilient
+    wrapper, exact repair under the dead-bank + 1% BER spec, quality at
+    the paper's operating BER, graceful degradation at 20% BER."""
+    import numpy as np
+    from repro import sort as sort_engine
+    from repro.core import device_model as dm
+    from repro.runtime import faults
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**16, 64).astype(np.uint16)
+    failures = []
+    # zero-fault parity: resilient:<e> returns <e>'s permutation untouched
+    for name, spec in sorted(sort_engine.engines().items()):
+        if name.startswith("resilient:"):
+            continue
+        try:
+            inner = sort_engine.sort(x, engine=name, k=2)
+            res = sort_engine.sort(x, engine=f"resilient:{name}", k=2)
+        except NotImplementedError:
+            continue
+        ok = (bool(np.array_equal(res.indices, inner.indices))
+              and res.quality == 1.0 and not res.degraded
+              and res.repairs == 0 and res.retries == 0)
+        _report(f"faults_parity_{name}", 0.0, {"ok": ok})
+        if not ok:
+            failures.append(f"parity:{name}")
+    # dead bank + 1% BER: repaired to an exact sort, repairs visible
+    spec = faults.FaultSpec(ber=0.01, dead_banks=(1,), banks=4, seed=3)
+    for eng in ("resilient:tns", "mb-ft"):
+        kw = {"banks": 4} if eng == "mb-ft" else {}
+        with faults.inject(spec):
+            res = sort_engine.sort(x, engine=eng, **kw)
+        ok = (res.quality == 1.0 and not res.degraded and res.repairs > 0
+              and bool(np.array_equal(res.values, np.sort(x))))
+        _report(f"faults_deadbank_{eng}", 0.0,
+                {"ok": ok, "repairs": res.repairs, "retries": res.retries,
+                 "extra_cycles": res.extra_cycles})
+        if not ok:
+            failures.append(f"deadbank:{eng}")
+    # paper's calibrated ML operating point: quality >= 0.99
+    ber = dm.operating_ber(3)
+    with faults.inject(faults.FaultSpec(ber=ber, seed=4)):
+        res = sort_engine.sort(x, engine="resilient:tns")
+    ok = res.quality >= 0.99 and not res.degraded
+    _report("faults_operating_ber", 0.0,
+            {"ok": ok, "ber": round(ber, 6), "quality": res.quality})
+    if not ok:
+        failures.append("operating-ber")
+    # 20% BER (Fig. S28's tolerance edge): degrade, don't raise
+    with faults.inject(faults.FaultSpec(ber=0.20, seed=5)):
+        res = sort_engine.sort(x, engine="resilient:tns")
+    ok = res.degraded and res.quality is not None and res.retries > 0
+    _report("faults_degrade_20pct", 0.0,
+            {"ok": ok, "quality": res.quality, "retries": res.retries})
+    if not ok:
+        failures.append("degrade-20pct")
+    if failures:
+        print(f"# FAULT SMOKE FAILED: {failures}", flush=True)
+        return 1
+    print("# FAULT SMOKE OK", flush=True)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section filter "
-                         "(sort,apps,sweeps,kernels,roofline)")
+                         "(sort,apps,sweeps,kernels,roofline,resilience)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast engine-registry pass for CI")
+    ap.add_argument("--smoke-faults", action="store_true",
+                    help="fault-injection + repair pass for CI")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
     if args.smoke:
         sys.exit(smoke())
+    if args.smoke_faults:
+        sys.exit(smoke_faults())
 
-    from benchmarks import (bench_apps, bench_kernels, bench_roofline,
-                            bench_sort, bench_sweeps)
+    from benchmarks import (bench_apps, bench_kernels, bench_resilience,
+                            bench_roofline, bench_sort, bench_sweeps)
     sections = {
         "sort": bench_sort.run,          # Fig 4f-g, S18/S19, Table S5
         "apps": bench_apps.run,          # Fig 5, Fig 6, Fig S28
         "sweeps": bench_sweeps.run,      # S11, S12, Fig 2e-g
         "kernels": bench_kernels.run,    # kernel micro-benchmarks
         "roofline": bench_roofline.run,  # §Roofline table from dry-run
+        "resilience": bench_resilience.run,  # Fig. S28 + §2.3.1 faults
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     for name in chosen:

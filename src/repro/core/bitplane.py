@@ -21,7 +21,7 @@ number-exclusion polarity of the paper (S6) is algebraically folded in.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -230,3 +230,38 @@ def encode_array(x, width: int, fmt: str) -> Tuple[np.ndarray, np.ndarray]:
     """Convenience: (bitplanes, sort_keys) — the "programming" step that
     writes a dataset into the memristor array (paper Fig. 2d)."""
     return to_bitplanes(x, width, fmt), sort_key(x, width, fmt)
+
+
+# ---------------------------------------------------------------------------
+# The device read path.  Engines route every digit-plane matrix they are
+# about to consume through read_planes(); normally it is the identity, but
+# a fault-injection context (repro.runtime.faults.inject) installs a hook
+# here, so device non-idealities — bit errors, stuck cells, dead banks —
+# reach every engine through the same interface real conductance noise
+# would.  Encoding helpers above stay clean: they model *programming* the
+# array, the hook models *reading* it.
+# ---------------------------------------------------------------------------
+
+_read_hook = None
+
+
+def set_read_hook(fn):
+    """Install ``fn(planes, *, kind, level_bits, banks) -> planes`` as the
+    device read process; returns the previous hook (for restoration)."""
+    global _read_hook
+    prev = _read_hook
+    _read_hook = fn
+    return prev
+
+
+def read_planes(planes, *, kind: str = "bit", level_bits: int = 1,
+                banks: Optional[int] = None):
+    """One device read of a stored (..., D, N) digit-plane matrix.
+    Identity unless a fault-injection hook is installed.  ``kind`` is
+    "bit" for binary planes or "digit" for radix-2^n digit planes;
+    ``banks`` tells the hook the bank layout (how dead banks map onto
+    slices of the number axis) when the caller knows it."""
+    hook = _read_hook
+    if hook is None:
+        return planes
+    return hook(planes, kind=kind, level_bits=level_bits, banks=banks)

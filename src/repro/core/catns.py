@@ -76,7 +76,7 @@ def bts_sort_planes(digits: jnp.ndarray,
 
 def bts_sort(values, width: int, fmt: str = bp.UNSIGNED, ascending: bool = True):
     x = np.asarray(values)
-    digits = bp.to_bitplanes(x, width, fmt)
+    digits = bp.read_planes(bp.to_bitplanes(x, width, fmt))
     sign = None
     if fmt in (bp.SIGNMAG, bp.FLOAT):
         u = bp.raw_bits(x, width, fmt).astype(np.uint64)
@@ -295,6 +295,9 @@ def multibank_sort(values, width: int, k: int, *, mesh: Mesh,
         digits = bp.to_bitplanes(x, width, fmt)
     else:
         digits = bp.to_digitplanes(x, width, fmt, level_bits)
+    digits = bp.read_planes(digits, kind="bit" if level_bits == 1 else
+                            "digit", level_bits=level_bits,
+                            banks=mesh.shape[axis])
     sign = None
     if fmt in (bp.SIGNMAG, bp.FLOAT):
         u = bp.raw_bits(x, width, fmt).astype(np.uint64)

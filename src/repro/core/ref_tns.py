@@ -68,6 +68,8 @@ def _encode(values, width: int, fmt: str, level_bits: int) -> np.ndarray:
             raise ValueError("multi-level strategy supports unsigned data "
                              "(paper demonstrates ML on unsigned numbers)")
         planes = np.asarray(bp.to_digitplanes(x, width, fmt, level_bits))
+    planes = bp.read_planes(planes, kind="bit" if level_bits == 1 else
+                            "digit", level_bits=level_bits)
     return planes.astype(np.int64)
 
 

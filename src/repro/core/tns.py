@@ -259,6 +259,8 @@ def tns_sort(values, width: int, k: int, fmt: str = bp.UNSIGNED,
         digits = bp.to_bitplanes(x, width, fmt)
     else:
         digits = bp.to_digitplanes(x, width, fmt, level_bits)
+    digits = bp.read_planes(digits, kind="bit" if level_bits == 1 else
+                            "digit", level_bits=level_bits)
     sign = None
     if fmt in (bp.SIGNMAG, bp.FLOAT):
         sign = jnp.asarray(bp.sign_plane(x, width, fmt))
@@ -795,6 +797,8 @@ def tns_sort_batch(values, width: int, k: int, fmt: str = bp.UNSIGNED,
         digits = bp.to_bitplanes(x, width, fmt)
     else:
         digits = bp.to_digitplanes(x, width, fmt, level_bits)
+    digits = bp.read_planes(digits, kind="bit" if level_bits == 1 else
+                            "digit", level_bits=level_bits)
     sign = None
     if fmt in (bp.SIGNMAG, bp.FLOAT):
         sign = jnp.asarray(bp.sign_plane(x, width, fmt))

@@ -21,6 +21,8 @@ import numpy as np
 from repro import configs
 from repro import sort as sort_engine
 from repro.data import pipeline as dp
+from repro.runtime import faults
+from repro.runtime.fault import run_step_with_retries
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as sh
 from repro.launch import steps as steps_lib
@@ -107,6 +109,13 @@ def main():
                          "config's choice)")
     ap.add_argument("--list-engines", action="store_true",
                     help="print the sort-engine registry and exit")
+    ap.add_argument("--fault-spec", default=None,
+                    help="inject device faults for the whole run, e.g. "
+                         "'ber=0.01,banks=4,dead_banks=1:2,seed=0' "
+                         "(see repro.runtime.faults.FaultSpec)")
+    ap.add_argument("--serve-retries", type=int, default=2,
+                    help="full-run retries when the fault pre-flight "
+                         "degrades (with --fault-spec)")
     args = ap.parse_args()
 
     if args.list_engines:
@@ -123,8 +132,36 @@ def main():
         if cfg.ssm_state:
             cfg = dataclasses.replace(
                 cfg, ssm_chunk=min(cfg.ssm_chunk, args.prompt_len))
-    res = serve(cfg, args.batch, args.prompt_len, args.max_new,
-                top_k=args.top_k, prune_rate=args.prune)
+    if args.fault_spec:
+        spec = faults.parse_spec(args.fault_spec)
+        counters = faults.FaultCounters()
+
+        def attempt():
+            with faults.inject(spec, counters=counters):
+                # pre-flight: a resilient sort on the faulted array; a
+                # degraded result means even the repair ladder cannot
+                # trust this array — retry (fresh read noise), then fail
+                probe = sort_engine.sort(
+                    np.arange(64, dtype=np.uint16)[::-1].copy(),
+                    engine="resilient:tns")
+                print(f"[serve] fault pre-flight: quality="
+                      f"{probe.quality:.3f} repairs={probe.repairs} "
+                      f"retries={probe.retries} degraded={probe.degraded}")
+                if probe.degraded:
+                    raise RuntimeError("fault pre-flight degraded")
+                return serve(cfg, args.batch, args.prompt_len, args.max_new,
+                             top_k=args.top_k, prune_rate=args.prune)
+
+        res = run_step_with_retries(
+            attempt, retries=args.serve_retries, backoff_s=0.05,
+            on_retry=lambda i, e: print(f"[serve] retry {i + 1}: {e}"))
+        print(f"[serve] fault counters: reads={counters.reads} "
+              f"faults={counters.faults_injected} "
+              f"corrected={counters.corrected} votes={counters.votes} "
+              f"delays={counters.delays}")
+    else:
+        res = serve(cfg, args.batch, args.prompt_len, args.max_new,
+                    top_k=args.top_k, prune_rate=args.prune)
     print(f"[serve] prefill {res['prefill_s']*1e3:.0f}ms, "
           f"decode {res['decode_tok_per_s']:.1f} tok/s, "
           f"prune={res['pruned']:.0%}")

@@ -18,6 +18,7 @@ train loop:
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -54,10 +55,14 @@ class Heartbeat:
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
 
-    def stop(self) -> None:
+    def stop(self, join_timeout_s: float = 2.0) -> None:
+        """Stop the self-beat thread; a wedged beat thread (e.g. blocked on
+        a dead link) is abandoned after ``join_timeout_s`` rather than
+        hanging shutdown — it is a daemon thread either way."""
         self._stop.set()
         if self._thread:
-            self._thread.join()
+            self._thread.join(timeout=join_timeout_s)
+            self._thread = None
 
 
 @dataclasses.dataclass
@@ -83,18 +88,24 @@ class StragglerMonitor:
 
 
 def run_step_with_retries(fn: Callable, *args, retries: int = 3,
-                          backoff_s: float = 0.5, retry_on=(RuntimeError,),
-                          on_retry: Optional[Callable[[int, Exception], None]] = None):
+                          backoff_s: float = 0.5, jitter: float = 0.25,
+                          retry_on=(RuntimeError,),
+                          on_retry: Optional[Callable[[int, Exception], None]] = None,
+                          **kwargs):
+    """Call ``fn(*args, **kwargs)``, retrying transient failures with
+    exponential backoff.  ``jitter`` spreads the sleep by up to that
+    fraction so a fleet of retrying steps does not thundering-herd the
+    same resource on the same schedule."""
     delay = backoff_s
     for attempt in range(retries + 1):
         try:
-            return fn(*args)
+            return fn(*args, **kwargs)
         except retry_on as e:  # transient: preemption, link flap, ...
             if attempt == retries:
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(delay)
+            time.sleep(delay * (1.0 + jitter * random.random()))
             delay *= 2
 
 

@@ -93,7 +93,17 @@ def sort(x, *, engine: str = "tns", fmt: Optional[str] = None,
             cycles=stack("cycles"), drs=stack("drs"),
             reload_cycles=stack("reload_cycles"),
             strategy=p0.strategy, k=p0.k, level_bits=p0.level_bits,
-            banks=p0.banks)
+            banks=p0.banks,
+            # resilience observables aggregate across the batch: quality
+            # is the worst instance (the degradation contract is per
+            # emission), counters sum, degraded if any instance degraded
+            quality=(None if p0.quality is None else
+                     min(float(p.quality) for p in parts)),
+            faults_injected=sum(p.faults_injected for p in parts),
+            repairs=sum(p.repairs for p in parts),
+            retries=sum(p.retries for p in parts),
+            degraded=any(p.degraded for p in parts),
+            extra_cycles=sum(p.extra_cycles for p in parts))
     return spec.fn(x, **call)
 
 

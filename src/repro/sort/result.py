@@ -35,6 +35,20 @@ class SortResult:
     k: int = 0
     level_bits: int = 1
     banks: int = 1                     # multi-bank configuration (§2.3.1)
+    # resilience observables (set by the "resilient:<engine>" wrapper and
+    # the fault-tolerant multi-bank engine; defaults mean "ran on an ideal
+    # array").  Degradation contract: degraded=False with quality=1.0
+    # means the output was verified sorted (repairs/retries say at what
+    # cost); degraded=True means every repair strategy failed and this is
+    # the best-effort permutation, with ``quality`` the fraction of
+    # emission positions holding the correct value (Fig. S28's metric).
+    quality: Optional[float] = None    # sorting accuracy of the emission
+    faults_injected: int = 0           # raw bit faults drawn during reads
+    repairs: int = 0                   # repair mechanisms in the final run
+    retries: int = 0                   # engine re-runs beyond the first
+    degraded: bool = False             # True => best-effort, not verified
+    extra_cycles: int = 0              # repair overhead: failed-attempt
+                                       # cycles + dead-bank migration
 
     @property
     def batched(self) -> bool:

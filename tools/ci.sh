@@ -12,3 +12,6 @@ python -m pytest -x -q
 
 echo "== sort-engine registry smoke =="
 python -m benchmarks.run --smoke
+
+echo "== fault-injection smoke =="
+python -m benchmarks.run --smoke-faults
