@@ -1,0 +1,35 @@
+"""Static-analysis suite for the sort-in-memory codebase.
+
+Four AST checker families tuned to this repo (``python -m repro.analysis``):
+
+* **tracer-safety** (TRC1xx): Python control flow / host numpy on traced
+  values inside ``jax.jit`` / ``lax.while_loop`` / ``pl.pallas_call``
+  bodies — the bugs that surface as ConcretizationTypeError at runtime,
+  caught at review time instead.
+* **Pallas-kernel lint** (PAL2xx): block-shape divisibility vs declared
+  grids, index-map arity, disallowed ops inside kernel bodies, missing
+  interpret-mode fallback via :mod:`repro.kernels.backend`.
+* **determinism lint** (DET3xx): unseeded ``random``/``np.random`` use,
+  wall-clock ``time.time()`` in measured/retry paths, unsorted registry
+  iteration — anything that would make ``SortResult`` cycles/quality
+  non-reproducible per seed.
+* **engine contracts** (CON4xx): every ``@register`` site cross-checked
+  against :class:`repro.sort.registry.EngineSpec`, the README capability
+  matrix and the parity suite; ``resilient:<engine>`` literals must name a
+  registered base engine.
+
+Suppression: a trailing ``# lint: disable=RULE[,RULE]`` comment silences a
+line; ``# lint: disable-file=RULE[,RULE]`` anywhere silences a whole file.
+``--fix`` rewrites the mechanically-safe findings (``time.time()`` ->
+``time.monotonic()``).
+
+On top of the AST pass, :mod:`repro.analysis.trace_gate` abstractly traces
+(``jax.eval_shape``) every registered engine's compiled core and every
+Pallas kernel over a (fmt x N x k x B) grid — shape/dtype breakage caught
+in seconds without executing a single sort.
+"""
+from repro.analysis.core import (Finding, analyze_paths, format_findings,
+                                 iter_python_files)
+
+__all__ = ["Finding", "analyze_paths", "format_findings",
+           "iter_python_files"]

@@ -1,0 +1,67 @@
+"""CLI driver: ``python -m repro.analysis [paths] [--fix] [--select ...]
+[--trace-gate]``.
+
+Exit status 0 iff no findings (and, with ``--trace-gate``, every abstract
+trace passed) — the contract `tools/ci.sh` relies on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.analysis.core import (analyze_paths, apply_fixes,
+                                 format_findings)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Sort-in-memory static analysis: tracer-safety "
+                    "(TRC1xx), Pallas-kernel lint (PAL2xx), determinism "
+                    "lint (DET3xx), engine contracts (CON4xx).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="RULE",
+                    help="only report these rules / rule families "
+                         "(e.g. DET303 or TRC); repeatable")
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite mechanically-safe findings in place")
+    ap.add_argument("--trace-gate", action="store_true",
+                    help="also run the jax.eval_shape abstract-trace gate "
+                         "over every registered engine and kernel")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="with --trace-gate: print passing traces too")
+    args = ap.parse_args(argv)
+
+    paths = [Path(p) for p in (args.paths or ["src"])]
+    select = set(args.select) if args.select else None
+
+    findings, n_files = analyze_paths(paths, select=select)
+    if args.fix and findings:
+        applied = apply_fixes(findings)
+        print(f"applied {applied} fix(es); re-checking", file=sys.stderr)
+        findings, n_files = analyze_paths(paths, select=select)
+
+    if findings:
+        print(format_findings(findings))
+    print(f"lint: {n_files} files, {len(findings)} finding(s)",
+          file=sys.stderr)
+    status = 1 if findings else 0
+
+    if args.trace_gate:
+        from repro.analysis import trace_gate
+        t0 = time.monotonic()
+        results = trace_gate.run_gate()
+        dt = time.monotonic() - t0
+        print(trace_gate.format_results(results, verbose=args.verbose))
+        print(f"trace gate completed in {dt:.1f}s", file=sys.stderr)
+        if any(not r.ok for r in results):
+            status = 1
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

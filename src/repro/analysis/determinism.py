@@ -1,0 +1,149 @@
+"""Determinism lint (DET3xx): anything that would make ``SortResult``
+cycles, quality metrics or retry timing non-reproducible per seed.
+
+* DET301 — stdlib ``random`` module calls (``random.random()``,
+  ``random.randint(...)``, ...): global, unseeded-by-default state.  Thread
+  a seeded ``np.random.Generator`` instead.
+* DET302 — legacy ``np.random`` global-state calls (``np.random.rand``,
+  ``np.random.seed``, ...) and ``np.random.default_rng()`` with no seed
+  argument.
+* DET303 — ``time.time()``: wall clock steps under NTP; use
+  ``time.monotonic()`` for elapsed measurements (``--fix``-able).
+  ``time.time_ns()`` used purely as a nonce is fine and not flagged.
+* DET304 — iteration over an engine-registry mapping or listing
+  (``engines()``, ``available_engines()``, ``_REGISTRY``) without
+  ``sorted(...)``: dict order is insertion order, which depends on import
+  order — dispatch and reporting must not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import Finding, ModuleInfo
+
+# random-module functions that read/advance the hidden global state
+_RANDOM_FNS = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "sample", "shuffle", "gauss", "normalvariate", "betavariate",
+    "expovariate", "seed", "getrandbits", "triangular",
+}
+
+_NP_RANDOM_LEGACY = {
+    "rand", "randn", "randint", "random", "random_sample", "uniform",
+    "choice", "shuffle", "permutation", "seed", "normal", "standard_normal",
+    "binomial", "poisson", "exponential", "get_state", "set_state",
+}
+
+# names whose call result / value is a registry view with insertion order
+_REGISTRY_ITER_NAMES = {"engines", "available_engines"}
+_REGISTRY_MAPS = {"_REGISTRY"}
+
+
+def _registry_source(node: ast.AST, mod: ModuleInfo) -> Optional[str]:
+    """If ``node`` evaluates to an engine-registry listing/mapping (or its
+    ``.items()``/``.keys()``/``.values()`` view), return a display name."""
+    if isinstance(node, ast.Call):
+        qual = mod.qualname(node.func)
+        if qual is not None:
+            leaf = qual.rsplit(".", 1)[-1]
+            if leaf in _REGISTRY_ITER_NAMES:
+                return leaf + "()"
+            if leaf in ("items", "keys", "values") \
+                    and isinstance(node.func, ast.Attribute):
+                inner = _registry_source(node.func.value, mod)
+                if inner is not None:
+                    return f"{inner}.{leaf}()"
+    qual = mod.qualname(node)
+    if qual is not None and qual.rsplit(".", 1)[-1] in _REGISTRY_MAPS:
+        return qual.rsplit(".", 1)[-1]
+    if isinstance(node, ast.Call) and mod.qualname(node.func) == "list" \
+            and node.args:
+        return _registry_source(node.args[0], mod)
+    return None
+
+
+def _is_sorted_call(node: ast.AST, mod: ModuleInfo) -> bool:
+    return isinstance(node, ast.Call) \
+        and mod.qualname(node.func) in ("sorted", "dict", "set", "len")
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    path = str(mod.path)
+
+    # comprehensions feeding a sorted()/set()/dict() call are order-safe
+    ordered: set = set()
+    for node in ast.walk(mod.tree):
+        if _is_sorted_call(node, mod):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.comprehension):
+                    ordered.add(id(sub))
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            qual = mod.qualname(node.func)
+            if qual is None:
+                continue
+
+            # DET301: stdlib random
+            if qual.startswith("random.") \
+                    and qual.split(".", 1)[1] in _RANDOM_FNS:
+                findings.append(Finding(
+                    "DET301", path, node.lineno, node.col_offset,
+                    f"global-state `{qual}()`; thread a seeded "
+                    "np.random.Generator through the call path instead"))
+
+            # DET302: np.random legacy globals / unseeded default_rng
+            elif qual.startswith("numpy.random."):
+                leaf = qual.rsplit(".", 1)[-1]
+                if leaf in _NP_RANDOM_LEGACY:
+                    findings.append(Finding(
+                        "DET302", path, node.lineno, node.col_offset,
+                        f"legacy global-state `np.random.{leaf}()`; use a "
+                        "seeded np.random.default_rng(seed)"))
+                elif leaf == "default_rng" and not node.args \
+                        and not node.keywords:
+                    findings.append(Finding(
+                        "DET302", path, node.lineno, node.col_offset,
+                        "np.random.default_rng() without a seed draws "
+                        "OS entropy; pass an explicit seed"))
+
+            # DET303: wall clock in elapsed measurements (fixable)
+            elif qual == "time.time":
+                end = getattr(node, "end_col_offset", None)
+                fix = None
+                if end is not None \
+                        and node.lineno == getattr(node, "end_lineno",
+                                                   node.lineno):
+                    seg = ast.get_source_segment(mod.source, node) or ""
+                    if seg in ("time.time()", "time()"):
+                        repl = "time.monotonic()" if seg.startswith("time.") \
+                            else "monotonic()"
+                        fix = (node.lineno, node.col_offset,
+                               node.end_lineno, end, repl)
+                findings.append(Finding(
+                    "DET303", path, node.lineno, node.col_offset,
+                    "wall-clock time.time() is not monotonic under NTP "
+                    "steps; use time.monotonic() for elapsed/retry timing",
+                    fix=fix))
+
+        # DET304: unsorted iteration over registry views
+        iters: List[ast.AST] = []
+        if isinstance(node, (ast.For, ast.comprehension)) \
+                and id(node) not in ordered:
+            iters.append(node.iter)
+        for it in iters:
+            if _is_sorted_call(it, mod):
+                continue
+            src = _registry_source(it, mod)
+            if src is not None:
+                line = getattr(node, "lineno", None) or it.lineno
+                col = getattr(node, "col_offset", None)
+                if col is None:
+                    col = it.col_offset
+                findings.append(Finding(
+                    "DET304", path, line, col,
+                    f"iteration over `{src}` depends on registration "
+                    "(import) order; wrap in sorted(...)"))
+    return findings

@@ -1,0 +1,208 @@
+"""Pallas-kernel lint (PAL2xx): structural checks on ``pl.pallas_call``
+sites and the kernel bodies they trace.
+
+* PAL201 — block-shape divisibility: when a ``BlockSpec`` block shape, the
+  paired ``ShapeDtypeStruct`` dims and the grid are all integer literals,
+  every block dim must divide the array dim (a non-dividing block silently
+  reads OOB-padded garbage in interpret mode and miscompiles on TPU).
+* PAL202 — index-map arity: a BlockSpec ``index_map`` lambda must take
+  exactly ``len(grid)`` arguments.
+* PAL203 — every ``pallas_call`` must thread an ``interpret=`` kwarg; the
+  backend decision (compiled on TPU/GPU, interpret on CPU) is
+  :mod:`repro.kernels.backend`'s job, never hardcoded per site.
+* PAL204 — ops that do not belong inside a kernel body: host ``numpy``
+  calls, and ``jnp`` ops with data-dependent output shapes
+  (``nonzero``/``unique``/one-arg ``where``/...) that cannot lower.
+* PAL205 — a module defining ``pallas_call`` sites must import
+  :mod:`repro.kernels.backend` (the interpret-mode fallback), so kernels
+  stay runnable on the CPU-only container.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, ModuleInfo, const_int, keyword_map
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
+BACKEND_MODULE = "repro.kernels.backend"
+
+# jnp/np ops that have no business inside a Pallas kernel body: data-
+# dependent output shapes or host-side semantics
+DISALLOWED_IN_KERNEL = {
+    "jax.numpy.nonzero", "jax.numpy.flatnonzero", "jax.numpy.unique",
+    "jax.numpy.sort", "jax.numpy.argsort", "jax.numpy.median",
+    "jax.numpy.percentile", "jax.numpy.quantile", "jax.numpy.asarray",
+}
+
+
+def _int_tuple(node: ast.AST) -> Optional[Tuple[Optional[int], ...]]:
+    """Literal tuple/list of ints (None entries for non-literal dims)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(const_int(e) for e in node.elts)
+    return None
+
+
+def _block_shape(spec: ast.Call) -> Optional[Tuple[Optional[int], ...]]:
+    if spec.args:
+        return _int_tuple(spec.args[0])
+    kw = keyword_map(spec)
+    if "block_shape" in kw:
+        return _int_tuple(kw["block_shape"])
+    return None
+
+
+def _index_map(spec: ast.Call) -> Optional[ast.Lambda]:
+    cand = spec.args[1] if len(spec.args) > 1 else \
+        keyword_map(spec).get("index_map")
+    return cand if isinstance(cand, ast.Lambda) else None
+
+
+def _as_list(node: ast.AST) -> List[ast.AST]:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _sds_shape(node: ast.AST, mod: ModuleInfo
+               ) -> Optional[Tuple[Optional[int], ...]]:
+    """Shape literal of a jax.ShapeDtypeStruct((..), dtype) call."""
+    if isinstance(node, ast.Call) \
+            and mod.qualname(node.func) == "jax.ShapeDtypeStruct" \
+            and node.args:
+        return _int_tuple(node.args[0])
+    return None
+
+
+def _check_site(mod: ModuleInfo, call: ast.Call,
+                findings: List[Finding]) -> None:
+    kw = keyword_map(call)
+
+    if "interpret" not in kw:
+        findings.append(Finding(
+            "PAL203", str(mod.path), call.lineno, call.col_offset,
+            "pallas_call without interpret= kwarg; thread "
+            "backend.use_interpret(...) through every kernel entry point"))
+
+    grid = kw.get("grid")
+    grid_len: Optional[int] = None
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        grid_len = len(grid.elts)
+    elif grid is not None and const_int(grid) is not None:
+        grid_len = 1
+
+    specs: List[ast.Call] = []
+    for side in ("in_specs", "out_specs"):
+        for item in _as_list(kw[side]) if side in kw else []:
+            if isinstance(item, ast.Call) \
+                    and mod.qualname(item.func) == BLOCK_SPEC:
+                specs.append(item)
+
+    # PAL202: index_map arity vs grid
+    if grid_len is not None:
+        for spec in specs:
+            lam = _index_map(spec)
+            if lam is None:
+                continue
+            arity = len(lam.args.args)
+            if arity != grid_len:
+                findings.append(Finding(
+                    "PAL202", str(mod.path), spec.lineno, spec.col_offset,
+                    f"BlockSpec index_map takes {arity} arg(s) but the "
+                    f"grid has {grid_len} dimension(s)"))
+
+    # PAL201: literal block shape must divide literal out_shape dims
+    if "out_specs" in kw and "out_shape" in kw:
+        out_specs = [s for s in _as_list(kw["out_specs"])
+                     if isinstance(s, ast.Call)
+                     and mod.qualname(s.func) == BLOCK_SPEC]
+        out_shapes = _as_list(kw["out_shape"])
+        for spec, sds in zip(out_specs, out_shapes):
+            block = _block_shape(spec)
+            dims = _sds_shape(sds, mod)
+            if block is None or dims is None:
+                continue
+            if len(block) != len(dims):
+                findings.append(Finding(
+                    "PAL201", str(mod.path), spec.lineno, spec.col_offset,
+                    f"BlockSpec rank {len(block)} != out_shape rank "
+                    f"{len(dims)}"))
+                continue
+            for b, d in zip(block, dims):
+                if b is not None and d is not None and b > 0 \
+                        and d % b != 0:
+                    findings.append(Finding(
+                        "PAL201", str(mod.path), spec.lineno,
+                        spec.col_offset,
+                        f"block dim {b} does not divide array dim {d}; "
+                        "pad the array or pick a dividing block shape"))
+
+
+def _check_kernel_body(mod: ModuleInfo, fn: ast.FunctionDef,
+                       findings: List[Finding]) -> None:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = mod.qualname(node.func)
+        if qual is None:
+            continue
+        if qual == "numpy" or qual.startswith("numpy."):
+            findings.append(Finding(
+                "PAL204", str(mod.path), node.lineno, node.col_offset,
+                f"host numpy call `{qual.replace('numpy', 'np', 1)}` "
+                "inside a Pallas kernel body"))
+        elif qual in DISALLOWED_IN_KERNEL:
+            findings.append(Finding(
+                "PAL204", str(mod.path), node.lineno, node.col_offset,
+                f"`{qual.replace('jax.numpy', 'jnp')}` inside a Pallas "
+                "kernel body (data-dependent shape / host semantics "
+                "cannot lower)"))
+        elif qual == "jax.numpy.where" and len(node.args) == 1:
+            findings.append(Finding(
+                "PAL204", str(mod.path), node.lineno, node.col_offset,
+                "one-argument `jnp.where` inside a Pallas kernel body "
+                "has a data-dependent output shape"))
+
+
+def _kernel_fn(mod: ModuleInfo, call: ast.Call,
+               by_name: Dict[str, ast.FunctionDef]
+               ) -> Optional[ast.FunctionDef]:
+    if not call.args:
+        return None
+    target = call.args[0]
+    if isinstance(target, ast.Call) and target.args:    # functools.partial
+        target = target.args[0]
+    if isinstance(target, ast.Name):
+        return by_name.get(target.id)
+    return None
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    sites = [n for n in ast.walk(mod.tree)
+             if isinstance(n, ast.Call)
+             and mod.qualname(n.func) == PALLAS_CALL]
+    if not sites:
+        return findings
+
+    imports_backend = any(
+        v == BACKEND_MODULE or v.startswith(BACKEND_MODULE + ".")
+        for v in (*mod.aliases.values(), *mod.from_imports.values()))
+    if not imports_backend:
+        findings.append(Finding(
+            "PAL205", str(mod.path), 1, 0,
+            "module defines pallas_call sites but never imports "
+            "repro.kernels.backend — kernels need the interpret-mode "
+            "fallback to stay runnable on CPU"))
+
+    by_name = {f.name: f for f in ast.walk(mod.tree)
+               if isinstance(f, ast.FunctionDef)}
+    seen_kernels: Set[int] = set()
+    for call in sites:
+        _check_site(mod, call, findings)
+        fn = _kernel_fn(mod, call, by_name)
+        if fn is not None and id(fn) not in seen_kernels:
+            seen_kernels.add(id(fn))
+            _check_kernel_body(mod, fn, findings)
+    return findings

@@ -1,0 +1,288 @@
+"""Abstract-trace gate: ``jax.eval_shape`` every registered engine's
+compiled core and every Pallas kernel over a (fmt x N x k x B) grid.
+
+``eval_shape`` runs the full JAX trace — shape propagation, dtype rules,
+``while_loop`` carry consistency, BlockSpec checking — without executing a
+single sort, so the whole grid costs seconds on CPU CI.  Breakage it
+catches: a carry whose dtype drifts between loop iterations, a kernel
+whose block no longer divides a padded dim, an engine whose declared
+``formats`` its core cannot actually trace.
+
+Engines whose core is host Python (``tns-oracle``, ``bts``, ``bitslice``)
+cannot be abstractly traced; for those — and for every engine, including
+lazily-built ``resilient:*`` wrappers — the gate binds the canonical
+engine-contract call signature instead::
+
+    fn(x, *, width, fmt, k, ascending, level_bits, stop_after)
+
+Run via ``python -m repro.analysis --trace-gate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core import radix_select as rs
+from repro.core import tns as jt
+from repro.kernels import bitplane_pack, digit_read, masked_matmul, radix_topk
+from repro.sort import registry
+
+#: per-format word width used across the test suite
+WIDTHS = {bp.UNSIGNED: 8, bp.TWOS: 8, bp.SIGNMAG: 16, bp.FLOAT: 16}
+
+_SIGNED = (bp.SIGNMAG, bp.FLOAT)
+
+
+@dataclasses.dataclass(frozen=True)
+class GateResult:
+    target: str                     # "engine:tns", "kernel:min_search", ...
+    case: str                       # "fmt=float N=24 k=2 B=2"
+    ok: bool
+    detail: str = ""
+
+    def format(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        tail = f" — {self.detail}" if self.detail and not self.ok else ""
+        return f"{status:4s} {self.target:24s} {self.case}{tail}"
+
+
+def _sds(shape: Tuple[int, ...], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _expect(got, shape: Tuple[int, ...], dtype, what: str) -> Optional[str]:
+    if tuple(got.shape) != shape:
+        return f"{what}: shape {tuple(got.shape)} != expected {shape}"
+    if got.dtype != jnp.dtype(dtype):
+        return f"{what}: dtype {got.dtype} != expected {jnp.dtype(dtype)}"
+    return None
+
+
+def _run(target: str, case: str, fn: Callable[[], Optional[str]]
+         ) -> GateResult:
+    try:
+        detail = fn()
+    except Exception as e:          # trace errors are the gate's product
+        detail = f"{type(e).__name__}: {e}"
+    return GateResult(target, case, detail is None, detail or "")
+
+
+def _key_dtype(width: int):
+    return jnp.uint8 if width <= 8 else jnp.uint16
+
+
+# ---------------------------------------------------------------------------
+# Core tracers.
+# ---------------------------------------------------------------------------
+
+
+def _trace_tns(fmt: str, n: int, k: int) -> Optional[str]:
+    width = WIDTHS[fmt]
+    sign = _sds((n,), jnp.bool_) if fmt in _SIGNED else None
+    out = jax.eval_shape(
+        functools.partial(jt.tns_sort_planes, k=k, fmt=fmt),
+        _sds((width, n), jnp.int32), sign)
+    return _expect(out.perm, (n,), jnp.int32, "perm") \
+        or _expect(out.cycles, (), jnp.int32, "cycles") \
+        or _expect(out.drs, (), jnp.int32, "drs")
+
+
+def _trace_tns_batched(fmt: str, n: int, k: int, b: int) -> Optional[str]:
+    width = WIDTHS[fmt]
+    sign = _sds((b, n), jnp.bool_) if fmt in _SIGNED else None
+    out = jax.eval_shape(
+        functools.partial(jt.tns_sort_planes_batched, k=k, fmt=fmt),
+        _sds((b, width, n), jnp.int32), sign)
+    return _expect(out.perm, (b, n), jnp.int32, "perm") \
+        or _expect(out.cycles, (b,), jnp.int32, "cycles")
+
+
+def _trace_ml(fmt: str, n: int, k: int) -> Optional[str]:
+    # the ml engine linearizes every format to unsigned keys and runs the
+    # radix-2^n machine; trace the level_bits=4 digit-plane core
+    width = WIDTHS[fmt]
+    out = jax.eval_shape(
+        functools.partial(jt.tns_sort_planes, k=k, fmt=bp.UNSIGNED,
+                          level_bits=4),
+        _sds((width // 4, n), jnp.int32), None)
+    return _expect(out.perm, (n,), jnp.int32, "perm")
+
+
+def _trace_radix(fmt: str, n: int, b: Optional[int]) -> Optional[str]:
+    width = WIDTHS[fmt]
+    shape = (n,) if b is None else (b, n)
+    perm = jax.eval_shape(
+        functools.partial(rs.radix_sort_keys, r=4),
+        _sds(shape, _key_dtype(width)))
+    return _expect(perm, shape, jnp.int32, "perm")
+
+
+def _trace_pallas_topk(n: int, k: int, b: int) -> Optional[str]:
+    kk = max(k, 1)
+    keys, idx = jax.eval_shape(
+        functools.partial(radix_topk.topk_keys, k=kk, interpret=True),
+        _sds((b, n), jnp.uint32))
+    return _expect(keys, (b, kk), jnp.uint32, "keys") \
+        or _expect(idx, (b, kk), jnp.int32, "indices")
+
+
+# ---------------------------------------------------------------------------
+# Kernel tracers (format-agnostic: uint8 planes / uint32 keys).
+# ---------------------------------------------------------------------------
+
+
+def _trace_min_search(n: int, b: int) -> Optional[str]:
+    mask, drs = jax.eval_shape(
+        functools.partial(digit_read.min_search, interpret=True),
+        _sds((b, 8, n), jnp.uint8))
+    return _expect(mask, (b, n), jnp.bool_, "mask") \
+        or _expect(drs, (b,), jnp.int32, "drs")
+
+
+def _trace_pack_roundtrip(n: int, b: int) -> Optional[str]:
+    keys = jax.eval_shape(
+        functools.partial(bitplane_pack.pack_keys, interpret=True),
+        _sds((b, n), jnp.float32))
+    err = _expect(keys, (b, n), jnp.uint32, "keys")
+    if err:
+        return err
+    vals = jax.eval_shape(
+        functools.partial(bitplane_pack.unpack_keys_f32, interpret=True),
+        keys)
+    return _expect(vals, (b, n), jnp.float32, "values")
+
+
+def _trace_pruned_matmul(n: int) -> Optional[str]:
+    out = jax.eval_shape(
+        functools.partial(masked_matmul.pruned_matmul, interpret=True),
+        _sds((n, n), jnp.float32), _sds((n, n), jnp.float32),
+        _sds((n,), jnp.bool_))
+    return _expect(out, (n, n), jnp.float32, "out")
+
+
+# ---------------------------------------------------------------------------
+# Engine contract binding.
+# ---------------------------------------------------------------------------
+
+
+def _bind_contract(spec: "registry.EngineSpec", fmt: str) -> Optional[str]:
+    try:
+        sig = inspect.signature(spec.fn)
+    except (TypeError, ValueError):
+        return None                  # builtins / C callables: skip
+    try:
+        sig.bind(None, width=WIDTHS[fmt], fmt=fmt, k=2, ascending=True,
+                 level_bits=1, stop_after=None)
+    except TypeError as e:
+        return f"engine fn does not bind the canonical contract: {e}"
+    return None
+
+
+#: engine name -> eval_shape tracer(s) for its compiled core.  Engines
+#: sharing a core (tns / mb / mb-ft / resilient:*) are traced once via the
+#: shared entry here; host-Python engines have no entry and get the
+#: signature-contract check only.
+ENGINE_CORES: Dict[str, str] = {
+    "tns": "tns", "mb": "tns", "mb-ft": "tns",
+    "ml": "ml",
+    "radix": "radix",
+    "pallas-topk": "pallas-topk",
+    "tns-oracle": "host", "bts": "host", "bitslice": "host",
+}
+
+
+def run_gate(ns: Sequence[int] = (8, 24), ks: Sequence[int] = (0, 2),
+             batches: Sequence[int] = (2,)) -> List[GateResult]:
+    """Trace every registered engine + kernel; returns one result per
+    (target, case).  All-ok iff every result's ``ok`` is True."""
+    results: List[GateResult] = []
+    engines = registry.available_engines()
+
+    # lazily-built resilient wrappers join the contract check
+    specs = dict(engines)
+    for name in sorted(engines):
+        if not name.startswith("resilient:"):
+            try:
+                specs[f"resilient:{name}"] = \
+                    registry.get_engine(f"resilient:{name}")
+            except KeyError:
+                pass
+
+    for name in sorted(specs):
+        spec = specs[name]
+        for fmt in spec.formats:
+            results.append(_run(
+                f"engine:{name}", f"contract fmt={fmt}",
+                functools.partial(_bind_contract, spec, fmt)))
+
+    traced_cores = set()
+    for name in sorted(engines):
+        core = ENGINE_CORES.get(name.split(":", 1)[-1])
+        if core is None:
+            results.append(GateResult(
+                f"engine:{name}", "core", False,
+                "engine has no trace-gate core mapping; add one to "
+                "repro.analysis.trace_gate.ENGINE_CORES"))
+            continue
+        if core in ("host",) or core in traced_cores:
+            continue
+        traced_cores.add(core)
+        spec = engines[name]
+        for fmt in spec.formats:
+            for n in ns:
+                for k in ks:
+                    case = f"fmt={fmt} N={n} k={k}"
+                    if core == "tns":
+                        results.append(_run(
+                            "core:tns", case,
+                            functools.partial(_trace_tns, fmt, n, k)))
+                        for b in batches:
+                            results.append(_run(
+                                "core:tns-batched", f"{case} B={b}",
+                                functools.partial(_trace_tns_batched,
+                                                  fmt, n, k, b)))
+                    elif core == "ml" and k == ks[-1]:
+                        results.append(_run(
+                            "core:ml", case,
+                            functools.partial(_trace_ml, fmt, n, k)))
+                    elif core == "radix" and k == ks[0]:
+                        results.append(_run(
+                            "core:radix", f"fmt={fmt} N={n}",
+                            functools.partial(_trace_radix, fmt, n, None)))
+                        for b in batches:
+                            results.append(_run(
+                                "core:radix", f"fmt={fmt} N={n} B={b}",
+                                functools.partial(_trace_radix, fmt, n, b)))
+                    elif core == "pallas-topk" and fmt == spec.formats[0]:
+                        for b in batches:
+                            results.append(_run(
+                                "kernel:radix_topk", f"N={n} k={k} B={b}",
+                                functools.partial(_trace_pallas_topk,
+                                                  n, k, b)))
+
+    for n in ns:
+        for b in batches:
+            results.append(_run(
+                "kernel:min_search", f"N={n} B={b}",
+                functools.partial(_trace_min_search, n, b)))
+            results.append(_run(
+                "kernel:pack_keys", f"N={n} B={b}",
+                functools.partial(_trace_pack_roundtrip, n, b)))
+        results.append(_run(
+            "kernel:pruned_matmul", f"N={n}",
+            functools.partial(_trace_pruned_matmul, n)))
+    return results
+
+
+def format_results(results: Sequence[GateResult],
+                   verbose: bool = False) -> str:
+    lines = [r.format() for r in results if verbose or not r.ok]
+    n_fail = sum(1 for r in results if not r.ok)
+    lines.append(f"trace gate: {len(results)} traces, {n_fail} failed")
+    return "\n".join(lines)

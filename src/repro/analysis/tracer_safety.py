@@ -1,0 +1,383 @@
+"""Tracer-safety checks (TRC1xx): Python-level control flow and host calls
+on traced values inside JAX-traced functions.
+
+A function is *traced* when it is
+
+* decorated with ``jax.jit`` (directly or via
+  ``functools.partial(jax.jit, static_argnames=...)``) or ``jax.vmap``;
+* passed as a body/cond/branch to ``lax.while_loop`` / ``lax.cond`` /
+  ``lax.scan`` / ``lax.fori_loop`` / ``lax.switch`` / ``lax.map`` /
+  ``jax.vmap`` / ``jax.jit``;
+* a Pallas kernel body (first argument of ``pl.pallas_call``, optionally
+  wrapped in ``functools.partial`` — the partial's keywords are static).
+
+Inside a traced function its array parameters are *tainted* (tracers at
+trace time); names listed in ``static_argnames``/``static_argnums`` and
+partial-bound keywords are static.  ``.shape`` / ``.ndim`` / ``.dtype``
+and ``len()`` results are static (shapes are concrete under tracing), as
+are closure variables — this is what keeps the machine-builder idiom in
+``core/tns.py`` (static config captured by closures) clean.
+
+Rules:
+
+* TRC101 — ``if`` / ``while`` / ``assert`` on a tainted expression: the
+  classic ConcretizationTypeError, or worse, a silently-specialized trace.
+* TRC102 — ``for`` over a tainted iterable.
+* TRC103 — host ``numpy`` call with a tainted argument (tracers must stay
+  in ``jnp``/``lax``).
+* TRC104 — concretization call on a tainted value: ``bool``/``int``/
+  ``float``/``.item()``/``.tolist()``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, ModuleInfo, const_str
+
+JIT_DECORATORS = {"jax.jit", "jax.vmap", "jax.pmap"}
+# canonical callee -> indices of function-valued arguments it traces
+TRACING_CALLS: Dict[str, Tuple[int, ...]] = {
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (1,),
+    "jax.lax.map": (0,),
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.eval_shape": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+    "jax.experimental.shard_map.shard_map": (0,),
+}
+# attribute accesses on a tracer that yield static (Python-level) values
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "_fields"}
+# calls whose result is static regardless of argument taint
+STATIC_CALLS = {"len", "range", "isinstance", "type", "getattr", "hasattr",
+                "functools.partial"}
+CONCRETIZING_CALLS = {"bool", "int", "float", "complex"}
+CONCRETIZING_METHODS = {"item", "tolist", "__bool__", "__int__"}
+
+
+def _fn_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class _TaintVisitor(ast.NodeVisitor):
+    """Walks one traced function body tracking which local names hold
+    traced values, flagging Python-level use of them."""
+
+    def __init__(self, mod: ModuleInfo, tainted: Set[str],
+                 findings: List[Finding],
+                 static_fns: Set[str] = frozenset()):
+        self.mod = mod
+        self.tainted = set(tainted)
+        self.findings = findings
+        # local helpers proven to return static values even on tracer
+        # arguments (e.g. a width lookup branching on `.dtype`)
+        self.static_fns = static_fns
+        # set by _returns_static(): records taint of each `return` expr
+        self.return_taints: Optional[List[bool]] = None
+
+    # -- taint of an expression -----------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value) or self.is_tainted(node.slice)
+        if isinstance(node, ast.Call):
+            qual = self.mod.qualname(node.func)
+            if qual in STATIC_CALLS:
+                return False
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in self.static_fns:
+                return False
+            args_tainted = any(self.is_tainted(a) for a in node.args) or \
+                any(self.is_tainted(kw.value) for kw in node.keywords)
+            if args_tainted:
+                return True
+            # method call on a tainted object (x.astype(...), x.at[...])
+            if isinstance(node.func, ast.Attribute):
+                return self.is_tainted(node.func.value)
+            # calling a tainted callable (e.g. step fn built from tracers)
+            return self.is_tainted(node.func)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # identity checks are structural — `x is None` is concrete at
+            # trace time even when x is a tracer
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.is_tainted(node.left) or \
+                any(self.is_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or \
+                self.is_tainted(node.orelse) or self.is_tainted(node.test)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        return False
+
+    # -- taint propagation through statements ---------------------------
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+
+    def _untaint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._untaint_target(e)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        for t in node.targets:
+            if self.is_tainted(node.value):
+                self._taint_target(t)
+            else:
+                self._untaint_target(t)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None and self.is_tainted(node.value):
+            self._taint_target(node.target)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self.is_tainted(node.value):
+            self._taint_target(node.target)
+
+    # -- the rules -------------------------------------------------------
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=str(self.mod.path), line=node.lineno,
+            col=node.col_offset, message=message))
+
+    def visit_If(self, node: ast.If) -> None:
+        if self.is_tainted(node.test):
+            self._flag("TRC101", node,
+                       "Python `if` on a traced value inside a traced "
+                       "function (use jnp.where / lax.cond)")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self.is_tainted(node.test):
+            self._flag("TRC101", node,
+                       "Python `while` on a traced value inside a traced "
+                       "function (use lax.while_loop)")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self.is_tainted(node.test):
+            self._flag("TRC101", node,
+                       "`assert` on a traced value inside a traced "
+                       "function (concretizes the tracer)")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self.is_tainted(node.iter):
+            self._flag("TRC102", node,
+                       "Python `for` over a traced value inside a traced "
+                       "function (use lax.scan / lax.fori_loop)")
+        else:
+            self._untaint_target(node.target)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        qual = self.mod.qualname(node.func)
+        any_tainted = any(self.is_tainted(a) for a in node.args) or \
+            any(self.is_tainted(kw.value) for kw in node.keywords)
+        if qual and any_tainted and (qual == "numpy"
+                                     or qual.startswith("numpy.")):
+            self._flag("TRC103", node,
+                       f"host numpy call `{qual.replace('numpy', 'np', 1)}`"
+                       " on a traced value (use jnp inside traced code)")
+        if qual in CONCRETIZING_CALLS and any_tainted:
+            self._flag("TRC104", node,
+                       f"`{qual}()` concretizes a traced value "
+                       "(breaks under jit)")
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in CONCRETIZING_METHODS \
+                and self.is_tainted(node.func.value):
+            self._flag("TRC104", node,
+                       f"`.{node.func.attr}()` concretizes a traced value "
+                       "(breaks under jit)")
+        self.generic_visit(node)
+
+    def visit_Return(self, node: ast.Return) -> None:
+        if self.return_taints is not None:
+            self.return_taints.append(
+                node.value is not None and self.is_tainted(node.value))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # nested defs (lax body fns, pl.when blocks) inherit the enclosing
+        # taint through their closure; their own params are traced too
+        inner = _TaintVisitor(self.mod, self.tainted | set(_fn_params(node)),
+                              self.findings, self.static_fns)
+        for stmt in node.body:
+            inner.visit(stmt)
+
+
+def _returns_static(mod: ModuleInfo, fn: ast.FunctionDef) -> bool:
+    """True when every `return` stays untainted with all params tainted —
+    the function maps tracers to static values (dtype/shape lookups)."""
+    probe = _TaintVisitor(mod, set(_fn_params(fn)), [])
+    probe.return_taints = []
+    for stmt in fn.body:
+        if isinstance(stmt, ast.FunctionDef):
+            continue                 # nested defs don't return for fn
+        probe.visit(stmt)
+    return bool(probe.return_taints) and not any(probe.return_taints)
+
+
+def _decorator_trace_info(mod: ModuleInfo, fn: ast.FunctionDef
+                          ) -> Optional[Set[str]]:
+    """Static parameter names if ``fn`` is traced by decorator, else None."""
+    for dec in fn.decorator_list:
+        qual = mod.qualname(dec if not isinstance(dec, ast.Call)
+                            else dec.func)
+        if qual in JIT_DECORATORS:
+            return set()
+        if qual == "functools.partial" and isinstance(dec, ast.Call) \
+                and dec.args:
+            inner = mod.qualname(dec.args[0])
+            if inner in JIT_DECORATORS:
+                return _static_names(mod, fn, dec)
+    return None
+
+
+def _static_names(mod: ModuleInfo, fn: ast.FunctionDef,
+                  call: ast.Call) -> Set[str]:
+    """static_argnames/static_argnums of a partial(jax.jit, ...) decorator,
+    resolved to parameter names."""
+    static: Set[str] = set()
+    params = _fn_params(fn)
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            static |= {s for s in (const_str(v) for v in vals)
+                       if s is not None}
+        elif kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int) \
+                        and v.value < len(params):
+                    static.add(params[v.value])
+    return static
+
+
+def _resolve_local_fn(scope_fns: Dict[str, ast.FunctionDef], node: ast.AST
+                      ) -> Tuple[Optional[ast.FunctionDef], Set[str]]:
+    """(function def, statically-bound param names) for a function-valued
+    argument — a bare name, or functools.partial(name, **static)."""
+    if isinstance(node, ast.Name) and node.id in scope_fns:
+        return scope_fns[node.id], set()
+    if isinstance(node, ast.Call) and node.args:
+        # functools.partial(kernel, static_kw=...) — the Pallas idiom
+        target = node.args[0]
+        if isinstance(target, ast.Name) and target.id in scope_fns:
+            return scope_fns[target.id], \
+                {kw.arg for kw in node.keywords if kw.arg}
+    return None, set()
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    findings: List[Finding] = []
+    all_fns = [n for n in ast.walk(mod.tree)
+               if isinstance(n, ast.FunctionDef)]
+
+    # scope chains: innermost enclosing function of every node, and each
+    # function's immediate nested defs — so `step` in tns_sort_planes
+    # resolves to ITS nested step, not a same-named sibling elsewhere
+    enclosing: Dict[ast.AST, Optional[ast.FunctionDef]] = {}
+
+    def _walk(node: ast.AST, fn: Optional[ast.FunctionDef]) -> None:
+        for child in ast.iter_child_nodes(node):
+            enclosing[child] = fn
+            _walk(child, child if isinstance(child, ast.FunctionDef)
+                  else fn)
+
+    _walk(mod.tree, None)
+    nested: Dict[Optional[ast.FunctionDef], Dict[str, ast.FunctionDef]] = {}
+    for fn in all_fns:
+        nested.setdefault(enclosing.get(fn), {})[fn.name] = fn
+
+    def scope_fns(at: ast.AST) -> Dict[str, ast.FunctionDef]:
+        out: Dict[str, ast.FunctionDef] = dict(nested.get(None, {}))
+        chain: List[Optional[ast.FunctionDef]] = []
+        fn = enclosing.get(at)
+        while fn is not None:
+            chain.append(fn)
+            fn = enclosing.get(fn)
+        for fn in reversed(chain):       # inner scopes shadow outer ones
+            out.update(nested.get(fn, {}))
+        return out
+
+    traced: List[Tuple[ast.FunctionDef, Set[str]]] = []
+    seen: Set[int] = set()
+
+    def mark(fn: ast.FunctionDef, static: Set[str]) -> None:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            traced.append((fn, static))
+
+    for fn in all_fns:
+        static = _decorator_trace_info(mod, fn)
+        if static is not None:
+            mark(fn, static)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = mod.qualname(node.func)
+        if qual not in TRACING_CALLS:
+            continue
+        for idx in TRACING_CALLS[qual]:
+            if idx < len(node.args):
+                fn, static = _resolve_local_fn(scope_fns(node),
+                                               node.args[idx])
+                if fn is not None:
+                    mark(fn, static)
+
+    # module-level helpers that map tracers to static values (width/dtype
+    # lookups) — calls to them do not propagate taint
+    traced_ids = {id(fn) for fn, _ in traced}
+    static_fns = {fn.name for fn in nested.get(None, {}).values()
+                  if id(fn) not in traced_ids and _returns_static(mod, fn)}
+
+    for fn, static in traced:
+        tainted = set(_fn_params(fn)) - static
+        visitor = _TaintVisitor(mod, tainted, findings, static_fns)
+        for stmt in fn.body:
+            visitor.visit(stmt)
+    # a nested body fn can be scanned both standalone (marked at its
+    # lax.* call site) and via its enclosing traced function — dedupe
+    return list(dict.fromkeys(findings))

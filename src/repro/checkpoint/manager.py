@@ -2,7 +2,7 @@
 
 Layout per step::
 
-    <dir>/step_000123.tmp-<nonce>/   (written, fsynced)
+    <dir>/step_000123.tmp-<pid>-<nonce>/   (written, fsynced)
         arrays.npz                   (flattened pytree, path-keyed)
         manifest.json                (step, tree paths, shapes, sha256)
     <dir>/step_000123/               (atomic rename — crash-safe commit)
@@ -48,6 +48,20 @@ def _sha(arrays: Dict[str, np.ndarray]) -> str:
         h.update(k.encode())
         h.update(np.ascontiguousarray(arrays[k]).tobytes())
     return h.hexdigest()
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True                  # exists, owned by someone else
+    except OSError:
+        return False
+    return True
 
 
 class CheckpointManager:
@@ -101,12 +115,20 @@ class CheckpointManager:
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
                           ignore_errors=True)
-        # drop orphaned tmp dirs from crashed writers
+        # drop orphaned tmp dirs from crashed writers: the dir name embeds
+        # the writer pid (".tmp-<pid>-<nonce>"); a dead pid means no writer
+        # can ever commit it (wall-clock ages are unreliable under NTP
+        # steps, so liveness beats any age threshold)
         for name in os.listdir(self.dir):
-            if ".tmp-" in name:
-                full = os.path.join(self.dir, name)
-                if time.time() - os.path.getmtime(full) > 3600:
-                    shutil.rmtree(full, ignore_errors=True)
+            if ".tmp-" not in name:
+                continue
+            try:
+                pid = int(name.split(".tmp-", 1)[1].split("-", 1)[0])
+            except (IndexError, ValueError):
+                pid = -1
+            if pid == os.getpid() or _pid_alive(pid):
+                continue
+            shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
 
     # -- restore ----------------------------------------------------------
     def all_steps(self):

@@ -168,7 +168,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     mesh_name = "2x16x16" if multi_pod else "16x16"
-    t0 = time.time()
+    t0 = time.monotonic()
     cfg, shape, fn, args, in_sh, out_sh, donate = build_cell(
         arch, shape_name, mesh, remat=remat, accum=accum,
         router_impl=router_impl, attn_impl=attn_impl,
@@ -186,7 +186,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 donate_argnums=donate)
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.monotonic() - t0
     mem = compiled.memory_analysis()
     txt = compiled.as_text()
     roof = rl.analyze(compiled, chips,

@@ -60,18 +60,18 @@ def serve(cfg: ArchConfig, batch: int, prompt_len: int, max_new: int,
     with mesh:
         with shard.mesh_axes(dp_axes, "model", mesh):
             caches = stacked.init_cache(cfg, batch, max_len)
-            t0 = time.time()
+            t0 = time.monotonic()
             args = (params, prompt, caches) + ((fe,) if wf else ())
             logits, caches = jax.jit(prefill)(*args)
             jax.block_until_ready(logits)
-            prefill_s = time.time() - t0
+            prefill_s = time.monotonic() - t0
 
             jd = jax.jit(decode)
             key = jax.random.PRNGKey(seed)
             tok = sampling.sample_logits(logits[:, -1, :], key, top_k)[:, None]
             out = [prompt, tok]
             pos = jnp.full((batch,), prompt_len - 1, jnp.int32)
-            t0 = time.time()
+            t0 = time.monotonic()
             for i in range(max_new - 1):
                 key, sk = jax.random.split(key)
                 pos = pos + 1
@@ -82,7 +82,7 @@ def serve(cfg: ArchConfig, batch: int, prompt_len: int, max_new: int,
                 out.append(tok)
             seq = jnp.concatenate(out, axis=1)
             jax.block_until_ready(seq)
-            decode_s = time.time() - t0
+            decode_s = time.monotonic() - t0
     return {
         "tokens": np.asarray(seq),
         "prefill_s": prefill_s,
@@ -154,7 +154,8 @@ def main():
 
         res = run_step_with_retries(
             attempt, retries=args.serve_retries, backoff_s=0.05,
-            on_retry=lambda i, e: print(f"[serve] retry {i + 1}: {e}"))
+            on_retry=lambda i, e: print(f"[serve] retry {i + 1}: {e}"),
+            rng=np.random.default_rng(spec.seed))
         print(f"[serve] fault counters: reads={counters.reads} "
               f"faults={counters.faults_injected} "
               f"corrected={counters.corrected} votes={counters.votes} "

@@ -88,7 +88,7 @@ def train(run: TrainRun, steps: int, mesh=None, log_every: int = 10,
     with mesh:
         with shard.mesh_axes(dp_axes, "model", mesh):
             for step in range(start_step, start_step + steps):
-                t0 = time.time()
+                t0 = time.monotonic()
                 x, y = dp.host_batch(cfg, run.shape, step, seed=run.seed)
                 args = (params, opt_state, x, y) + ((fe,) if wf else ())
 
@@ -98,8 +98,9 @@ def train(run: TrainRun, steps: int, mesh=None, log_every: int = 10,
                     return p, s, m
 
                 params, opt_state, metrics = fault.run_step_with_retries(
-                    do_step, retries=2)
-                dt = time.time() - t0
+                    do_step, retries=2,
+                    rng=np.random.default_rng(run.seed + step))
+                dt = time.monotonic() - t0
                 straggler.observe(dt)
                 hb.beat()
                 loss = float(metrics["loss"])

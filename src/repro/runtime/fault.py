@@ -18,7 +18,6 @@ train loop:
 from __future__ import annotations
 
 import dataclasses
-import random
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -91,11 +90,16 @@ def run_step_with_retries(fn: Callable, *args, retries: int = 3,
                           backoff_s: float = 0.5, jitter: float = 0.25,
                           retry_on=(RuntimeError,),
                           on_retry: Optional[Callable[[int, Exception], None]] = None,
+                          rng: Optional[np.random.Generator] = None,
                           **kwargs):
     """Call ``fn(*args, **kwargs)``, retrying transient failures with
     exponential backoff.  ``jitter`` spreads the sleep by up to that
     fraction so a fleet of retrying steps does not thundering-herd the
-    same resource on the same schedule."""
+    same resource on the same schedule.  ``rng`` draws the jitter; pass a
+    generator seeded per worker so retry timing is reproducible per seed
+    (the default is seeded so bare calls stay deterministic too)."""
+    if rng is None:
+        rng = np.random.default_rng(0)
     delay = backoff_s
     for attempt in range(retries + 1):
         try:
@@ -105,7 +109,7 @@ def run_step_with_retries(fn: Callable, *args, retries: int = 3,
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(delay * (1.0 + jitter * random.random()))
+            time.sleep(delay * (1.0 + jitter * float(rng.random())))
             delay *= 2
 
 

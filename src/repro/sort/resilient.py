@@ -165,7 +165,8 @@ def _repair_ladder(run: Callable[[faults.FaultSpec], SortResult],
 
     try:
         res = run_step_with_retries(once, retries=base.max_retries,
-                                    backoff_s=0.002, jitter=0.5)
+                                    backoff_s=0.002, jitter=0.5,
+                                    rng=np.random.default_rng(base.seed))
         repairs = int(remapped) + 2
         return res, 1.0, repairs, retries, False, _burned_cycles(attempts)
     except RuntimeError:
@@ -387,5 +388,5 @@ def _mb_ft(x, *, width, fmt, k, ascending, level_bits, stop_after, banks=4,
 # Wrap everything registered so far (built-ins + mb-ft).  Engines
 # registered later get a wrapper lazily the first time
 # "resilient:<name>" is requested from the registry.
-for _name in [n for n in list(_REGISTRY) if not n.startswith(PREFIX)]:
+for _name in sorted(n for n in _REGISTRY if not n.startswith(PREFIX)):
     make_resilient(_name)

@@ -1,0 +1,526 @@
+"""Tests for the static-analysis suite (repro.analysis).
+
+Each rule family is exercised with a fixture snippet that violates it —
+asserting the exact rule ID fires — plus the clean-tree assertion that
+keeps the CI lane honest: zero findings on src/.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths
+from repro.analysis.core import apply_fixes, parse_suppressions
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def _lint(tmp_path, source, name="fixture.py", select=None):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    findings, n = analyze_paths([f], select=select)
+    assert n == 1
+    return findings
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# TRC1xx: tracer safety
+# ---------------------------------------------------------------------------
+
+
+class TestTracerSafety:
+    def test_if_on_traced_value(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert "TRC101" in _rules(findings)
+
+    def test_while_loop_body_for_over_carry(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+
+            def run(x):
+                def body(carry):
+                    total = 0
+                    for v in carry:
+                        total = total + v
+                    return total
+
+                def cond(carry):
+                    return carry.sum() > 0
+
+                return jax.lax.while_loop(cond, body, x)
+        """)
+        assert "TRC102" in _rules(findings)
+
+    def test_host_numpy_on_tracer(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.square(x)
+        """)
+        assert "TRC103" in _rules(findings)
+
+    def test_concretizing_call(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                return float(x)
+        """)
+        assert "TRC104" in _rules(findings)
+
+    def test_static_argnames_are_clean(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("k",))
+            def f(x, k):
+                if k > 0:
+                    return x[:k]
+                return x
+        """)
+        assert findings == []
+
+    def test_shape_branching_is_clean(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 4:
+                    return x * 2
+                return x
+        """)
+        assert findings == []
+
+    def test_is_none_check_is_clean(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x, bias=None):
+                if bias is None:
+                    return x
+                return x + bias
+        """)
+        assert findings == []
+
+    def test_dtype_helper_returns_static(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            import jax.numpy as jnp
+
+            def width_of(x):
+                if x.dtype == jnp.uint8:
+                    return 8
+                return 32
+
+            @jax.jit
+            def f(x):
+                w = width_of(x)
+                assert w % 4 == 0
+                return x
+        """)
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# PAL2xx: Pallas-kernel lint
+# ---------------------------------------------------------------------------
+
+
+class TestPallasLint:
+    def test_bad_block_shape(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    grid=(4,),
+                    out_specs=pl.BlockSpec((96, 128), lambda i: (i, 0)),
+                    out_shape=jax.ShapeDtypeStruct((256, 128), x.dtype),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL201" in _rules(findings)
+
+    def test_index_map_arity(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    grid=(4, 2),
+                    out_specs=pl.BlockSpec((64, 64), lambda i: (i, 0)),
+                    out_shape=jax.ShapeDtypeStruct((256, 128), x.dtype),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL202" in _rules(findings)
+
+    def test_missing_interpret_kwarg(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    out_shape=jax.ShapeDtypeStruct((8,), x.dtype),
+                )(x)
+        """)
+        assert "PAL203" in _rules(findings)
+
+    def test_disallowed_op_in_kernel_body(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = np.sort(x_ref[...])
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    out_shape=jax.ShapeDtypeStruct((8,), x.dtype),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL204" in _rules(findings)
+
+    def test_missing_backend_import(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            from jax.experimental import pallas as pl
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    out_shape=jax.ShapeDtypeStruct((8,), x.dtype),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL205" in _rules(findings)
+
+
+# ---------------------------------------------------------------------------
+# DET3xx: determinism lint
+# ---------------------------------------------------------------------------
+
+
+class TestDeterminismLint:
+    def test_stdlib_random(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import random
+
+            def backoff():
+                return 0.5 * random.random()
+        """)
+        assert "DET301" in _rules(findings)
+
+    def test_np_random_legacy(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import numpy as np
+
+            def noise(n):
+                return np.random.rand(n)
+        """)
+        assert "DET302" in _rules(findings)
+
+    def test_unseeded_default_rng(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import numpy as np
+
+            def gen():
+                return np.random.default_rng()
+        """)
+        assert "DET302" in _rules(findings)
+        clean = _lint(tmp_path, """
+            import numpy as np
+
+            def gen(seed):
+                return np.random.default_rng(seed)
+        """, name="clean.py")
+        assert clean == []
+
+    def test_time_time_flagged_and_fixable(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import time
+
+            def measure(fn):
+                t0 = time.time()
+                fn()
+                return time.time() - t0
+        """)
+        det = [f for f in findings if f.rule == "DET303"]
+        assert len(det) == 2 and all(f.fix is not None for f in det)
+        applied = apply_fixes(det)
+        assert applied == 2
+        text = (tmp_path / "fixture.py").read_text()
+        assert "time.monotonic()" in text and "time.time()" not in text
+        assert analyze_paths([tmp_path / "fixture.py"])[0] == []
+
+    def test_unsorted_registry_iteration(self, tmp_path):
+        findings = _lint(tmp_path, """
+            from repro.sort.registry import available_engines
+
+            def report():
+                for name in available_engines():
+                    print(name)
+        """)
+        assert "DET304" in _rules(findings)
+        clean = _lint(tmp_path, """
+            from repro.sort.registry import available_engines
+
+            def report():
+                for name in sorted(available_engines()):
+                    print(name)
+        """, name="clean.py")
+        assert clean == []
+
+
+# ---------------------------------------------------------------------------
+# CON4xx: engine contracts
+# ---------------------------------------------------------------------------
+
+
+class TestContracts:
+    def test_invalid_register_site(self, tmp_path):
+        findings = _lint(tmp_path, """
+            from repro.sort.registry import register
+
+            @register("bogus", mode="warpspeed", turbo=True)
+            def bogus(x, **kw):
+                return x
+        """)
+        rules = _rules(findings)
+        assert rules.count("CON401") == 2    # bad mode + unknown kwarg
+
+    def test_resilient_unregistered_base(self, tmp_path):
+        findings = _lint(tmp_path, """
+            from repro.sort.registry import register
+
+            @register("real", mode="latency")
+            def real(x, **kw):
+                return x
+
+            WRAPPED = "resilient:ghost"
+        """)
+        assert "CON405" in _rules(findings)
+
+    def test_duplicate_registration(self, tmp_path):
+        (tmp_path / "a.py").write_text(textwrap.dedent("""
+            from repro.sort.registry import register
+
+            @register("dup", mode="latency")
+            def a(x, **kw):
+                return x
+        """))
+        (tmp_path / "b.py").write_text(textwrap.dedent("""
+            from repro.sort.registry import register
+
+            @register("dup", mode="latency")
+            def b(x, **kw):
+                return x
+        """))
+        findings, n = analyze_paths([tmp_path])
+        assert n == 2
+        assert "CON406" in _rules(findings)
+
+    def test_readme_and_parity_cross_checks(self, tmp_path):
+        (tmp_path / "README.md").write_text(
+            "| engine | mode |\n|---|---|\n| `ghost` | latency |\n")
+        tests_dir = tmp_path / "tests"
+        tests_dir.mkdir()
+        (tests_dir / "test_sort_engine.py").write_text(
+            "def test_nothing():\n    pass\n")
+        (tmp_path / "eng.py").write_text(textwrap.dedent("""
+            from repro.sort.registry import register
+
+            @register("real", mode="latency")
+            def real(x, **kw):
+                return x
+        """))
+        findings, _ = analyze_paths([tmp_path])
+        rules = _rules(findings)
+        assert "CON402" in rules     # "real" has no capability-matrix row
+        assert "CON403" in rules     # "ghost" row names no engine
+        assert "CON404" in rules     # "real" never hits the parity suite
+
+    def test_dynamic_parity_sweep_counts_as_coverage(self, tmp_path):
+        (tmp_path / "README.md").write_text(
+            "| engine | mode |\n|---|---|\n| `real` | latency |\n")
+        tests_dir = tmp_path / "tests"
+        tests_dir.mkdir()
+        (tests_dir / "test_sort_engine.py").write_text(
+            "from repro.sort.registry import available_engines\n"
+            "def test_all():\n"
+            "    for name in sorted(available_engines()):\n"
+            "        pass\n")
+        (tmp_path / "eng.py").write_text(textwrap.dedent("""
+            from repro.sort.registry import register
+
+            @register("real", mode="latency")
+            def real(x, **kw):
+                return x
+        """))
+        findings, _ = analyze_paths([tmp_path])
+        assert "CON404" not in _rules(findings)
+
+    def test_real_registry_agrees_with_readme_and_parity_suite(self):
+        findings, _ = analyze_paths([SRC], select={"CON"})
+        assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# Suppression comments
+# ---------------------------------------------------------------------------
+
+
+class TestSuppression:
+    def test_line_suppression(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import random
+
+            def backoff():
+                return 0.5 * random.random()  # lint: disable=DET301
+        """)
+        assert findings == []
+
+    def test_file_suppression(self, tmp_path):
+        findings = _lint(tmp_path, """
+            # lint: disable-file=DET301
+            import random
+
+            def a():
+                return random.random()
+
+            def b():
+                return random.random()
+        """)
+        assert findings == []
+
+    def test_suppression_is_rule_specific(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import random
+
+            def backoff():
+                return 0.5 * random.random()  # lint: disable=DET302
+        """)
+        assert "DET301" in _rules(findings)
+
+    def test_parse_suppressions(self):
+        per_line, per_file = parse_suppressions(
+            "x = 1  # lint: disable=TRC101, DET303\n"
+            "# lint: disable-file=PAL205\n")
+        assert per_line == {1: {"TRC101", "DET303"}}
+        assert per_file == {"PAL205"}
+
+
+# ---------------------------------------------------------------------------
+# The clean-tree gate + CLI contract
+# ---------------------------------------------------------------------------
+
+
+class TestCleanTree:
+    def test_src_has_zero_findings(self):
+        findings, n_files = analyze_paths([SRC])
+        assert n_files > 50
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_cli_exit_codes(self, tmp_path):
+        env_src = str(SRC)
+        clean = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", str(SRC)],
+            capture_output=True, text=True, cwd=REPO,
+            env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu"})
+        assert clean.returncode == 0, clean.stdout + clean.stderr
+
+        bad = tmp_path / "bad.py"
+        bad.write_text("import random\nx = random.random()\n")
+        dirty = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", str(bad)],
+            capture_output=True, text=True, cwd=REPO,
+            env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu"})
+        assert dirty.returncode == 1
+        assert "DET301" in dirty.stdout
+
+
+# ---------------------------------------------------------------------------
+# Abstract-trace gate
+# ---------------------------------------------------------------------------
+
+
+class TestTraceGate:
+    def test_gate_passes_on_current_tree(self):
+        from repro.analysis import trace_gate
+        results = trace_gate.run_gate(ns=(8,), ks=(2,), batches=(2,))
+        assert results
+        bad = [r for r in results if not r.ok]
+        assert bad == [], "\n".join(r.format() for r in bad)
+
+    def test_gate_covers_every_engine_and_format(self):
+        from repro.analysis import trace_gate
+        from repro.sort import registry
+
+        results = trace_gate.run_gate(ns=(8,), ks=(2,), batches=(2,))
+        targets = {r.target for r in results}
+        for name, spec in sorted(registry.available_engines().items()):
+            assert f"engine:{name}" in targets
+            cases = {r.case for r in results
+                     if r.target == f"engine:{name}"}
+            for fmt in spec.formats:
+                assert f"contract fmt={fmt}" in cases
+
+    def test_gate_catches_shape_breakage(self):
+        from repro.analysis import trace_gate
+
+        def broken():
+            raise TypeError("rank mismatch")
+
+        r = trace_gate._run("engine:x", "case", broken)
+        assert not r.ok and "rank mismatch" in r.detail

@@ -7,6 +7,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 
+echo "== static analysis =="
+python -m repro.analysis src/ --trace-gate
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

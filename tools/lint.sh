@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Static-analysis entry point: AST lint (tracer-safety, Pallas, determinism,
+# engine contracts) + the jax.eval_shape abstract-trace gate.
+# Usage: tools/lint.sh [paths...] [--fix] [--select RULE]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [ "$#" -eq 0 ]; then
+    exec python -m repro.analysis src/ --trace-gate
+fi
+exec python -m repro.analysis "$@"
