@@ -138,15 +138,41 @@ def smoke_faults() -> int:
     return 0
 
 
+def smoke_serve() -> int:
+    """Serving CI lane: continuous batching beats the one-shot loop at an
+    identical request mix, the budget dispatcher spreads across >= 3
+    engines, a faulted trace routes to verified engines only, and the
+    whole loop is deterministic on the simulated clock."""
+    from benchmarks import bench_serve
+
+    rep = bench_serve.build_report(smoke=True)
+    for arm in ("continuous", "oneshot"):
+        d = rep[arm]
+        _report(f"serve_{arm}", d["wall_ms"] * 1e3,
+                {"throughput_elems_per_us": d["throughput_elems_per_us"],
+                 "engines": d["engines"]})
+    _report("serve_speedup", 0.0, {"speedup": rep["speedup"],
+                                   "deterministic": rep["deterministic"]})
+    failures = bench_serve.check(rep)
+    if failures:
+        print(f"# SERVE SMOKE FAILED: {failures}", flush=True)
+        return 1
+    print("# SERVE SMOKE OK", flush=True)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section filter "
-                         "(sort,apps,sweeps,kernels,roofline,resilience)")
+                         "(sort,apps,sweeps,kernels,roofline,resilience,"
+                         "serve)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast engine-registry pass for CI")
     ap.add_argument("--smoke-faults", action="store_true",
                     help="fault-injection + repair pass for CI")
+    ap.add_argument("--smoke-serve", action="store_true",
+                    help="continuous-batching serving pass for CI")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
@@ -154,9 +180,12 @@ def main() -> None:
         sys.exit(smoke())
     if args.smoke_faults:
         sys.exit(smoke_faults())
+    if args.smoke_serve:
+        sys.exit(smoke_serve())
 
     from benchmarks import (bench_apps, bench_kernels, bench_resilience,
-                            bench_roofline, bench_sort, bench_sweeps)
+                            bench_roofline, bench_serve, bench_sort,
+                            bench_sweeps)
     sections = {
         "sort": bench_sort.run,          # Fig 4f-g, S18/S19, Table S5
         "apps": bench_apps.run,          # Fig 5, Fig 6, Fig S28
@@ -164,6 +193,7 @@ def main() -> None:
         "kernels": bench_kernels.run,    # kernel micro-benchmarks
         "roofline": bench_roofline.run,  # §Roofline table from dry-run
         "resilience": bench_resilience.run,  # Fig. S28 + §2.3.1 faults
+        "serve": bench_serve.run,        # continuous batching vs one-shot
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     for name in chosen:

@@ -133,16 +133,33 @@ def _check_site(site: RegisterSite) -> List[Finding]:
 
 
 def _readme_engines(root: Path) -> Dict[str, int]:
-    """Engine name -> line number for every capability-matrix row."""
+    """Engine name -> line number for every capability-matrix row.
+
+    Only rows of the capability matrix count — the table whose header's
+    first cell is ``engine``.  Other README tables with backticked first
+    columns (budget fields, dispatch summaries, ...) are not engine
+    claims."""
     readme = root / "README.md"
     rows: Dict[str, int] = {}
     try:
         lines = readme.read_text().splitlines()
     except OSError:
         return rows
+    in_matrix = False
     for i, text in enumerate(lines, start=1):
+        stripped = text.strip()
+        if not stripped.startswith("|"):
+            in_matrix = False
+            continue
+        cells = [c.strip() for c in stripped.strip("|").split("|")]
+        first = cells[0].strip("`").lower() if cells else ""
+        if first == "engine":
+            in_matrix = True
+            continue
+        if not in_matrix:
+            continue
         m = _MATRIX_ROW.match(text)
-        if m and m.group(1) not in ("engine",):
+        if m:
             rows.setdefault(m.group(1), i)
     return rows
 

@@ -82,6 +82,16 @@ def operating_point(strategy: str, *, n: int = 1024, w: int = 32,
                     banks: int = 1) -> OperatingPoint:
     """Operating point for a configuration.  Exact at the Table S5 anchors;
     scaled by the documented laws elsewhere."""
+    if strategy not in TABLE_S5:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected one of "
+            f"{sorted(TABLE_S5)}")
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if w < 1:
+        raise ValueError(f"w must be >= 1, got {w}")
+    if banks < 1:
+        raise ValueError(f"banks must be >= 1, got {banks}")
     base = TABLE_S5[strategy]
     kk = base.k_ref if k is None else k
     n_bank = max(1, n // banks) if strategy == "mb" else n

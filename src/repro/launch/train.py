@@ -29,7 +29,7 @@ from repro.launch import steps as steps_lib
 from repro.models import shard, stacked
 from repro.models.config import ArchConfig, ShapeConfig
 from repro.optim import adamw
-from repro.runtime import fault
+from repro.runtime import faults
 
 
 @dataclasses.dataclass
@@ -80,9 +80,9 @@ def train(run: TrainRun, steps: int, mesh=None, log_every: int = 10,
         (params, opt_state), start_step = mgr.restore((params, opt_state))
         print(f"[train] resumed from step {start_step}")
 
-    hb = fault.Heartbeat(interval_s=2.0, timeout_s=30.0)
+    hb = faults.Heartbeat(interval_s=2.0, timeout_s=30.0)
     hb.start_self_beat()
-    straggler = fault.StragglerMonitor()
+    straggler = faults.StragglerMonitor()
     fe = dp.frontend_stub(cfg, run.shape.global_batch) if wf else None
     history = []
     with mesh:
@@ -97,7 +97,7 @@ def train(run: TrainRun, steps: int, mesh=None, log_every: int = 10,
                     jax.block_until_ready(m["loss"])
                     return p, s, m
 
-                params, opt_state, metrics = fault.run_step_with_retries(
+                params, opt_state, metrics = faults.run_step_with_retries(
                     do_step, retries=2,
                     rng=np.random.default_rng(run.seed + step))
                 dt = time.monotonic() - t0

@@ -1,144 +1,19 @@
-"""Fault-tolerance runtime: heartbeats, straggler detection, step retries,
-and elastic re-meshing.
-
-On a real multi-pod deployment these hooks sit around the single-controller
-train loop:
-
-* ``Heartbeat``: background liveness thread per host; a missed deadline
-  marks the host suspect and triggers checkpoint-restore-rescale.
-* ``StragglerMonitor``: EMA of per-step wall time; steps slower than
-  ``threshold x`` EMA are flagged (on TPU pods the usual mitigation is
-  re-sharding around the slow host + data-reassignment, which
-  ``elastic_remesh`` performs).
-* ``run_step_with_retries``: transient-failure wrapper (preemption,
-  DEADLINE_EXCEEDED from a flaky ICI link) with exponential backoff.
-* ``elastic_remesh``: rebuilds the mesh from the surviving device set and
-  re-shards a checkpointed state pytree into it — elastic scale-down/up.
-"""
+"""Deprecated alias — the fault-tolerance runtime moved into
+:mod:`repro.runtime.faults`, which now owns both halves of the fault
+story (device-fault injection and the recovery runtime).  This shim
+re-exports the old names and will be removed in a future release."""
 from __future__ import annotations
 
-import dataclasses
-import threading
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from repro.runtime.faults import (Heartbeat, StragglerMonitor,
+                                  best_mesh_shape, elastic_remesh,
+                                  reshard_state, run_step_with_retries)
 
+__all__ = ["Heartbeat", "StragglerMonitor", "best_mesh_shape",
+           "elastic_remesh", "reshard_state", "run_step_with_retries"]
 
-class Heartbeat:
-    def __init__(self, interval_s: float = 5.0, timeout_s: float = 15.0):
-        self.interval = interval_s
-        self.timeout = timeout_s
-        self._beats: Dict[str, float] = {}
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-
-    def beat(self, host: str = "host0") -> None:
-        with self._lock:
-            self._beats[host] = time.monotonic()
-
-    def suspects(self) -> List[str]:
-        now = time.monotonic()
-        with self._lock:
-            return [h for h, t in self._beats.items()
-                    if now - t > self.timeout]
-
-    def start_self_beat(self, host: str = "host0") -> None:
-        def loop():
-            while not self._stop.is_set():
-                self.beat(host)
-                self._stop.wait(self.interval)
-        self._thread = threading.Thread(target=loop, daemon=True)
-        self._thread.start()
-
-    def stop(self, join_timeout_s: float = 2.0) -> None:
-        """Stop the self-beat thread; a wedged beat thread (e.g. blocked on
-        a dead link) is abandoned after ``join_timeout_s`` rather than
-        hanging shutdown — it is a daemon thread either way."""
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=join_timeout_s)
-            self._thread = None
-
-
-@dataclasses.dataclass
-class StragglerMonitor:
-    threshold: float = 2.0
-    decay: float = 0.9
-    ema: Optional[float] = None
-    flagged_steps: int = 0
-
-    def observe(self, step_time_s: float) -> bool:
-        """Returns True if this step counts as a straggler event."""
-        if self.ema is None:
-            self.ema = step_time_s
-            return False
-        is_straggler = step_time_s > self.threshold * self.ema
-        if is_straggler:
-            self.flagged_steps += 1
-        else:
-            # only fold healthy steps into the EMA so one slow host does
-            # not mask the next
-            self.ema = self.decay * self.ema + (1 - self.decay) * step_time_s
-        return is_straggler
-
-
-def run_step_with_retries(fn: Callable, *args, retries: int = 3,
-                          backoff_s: float = 0.5, jitter: float = 0.25,
-                          retry_on=(RuntimeError,),
-                          on_retry: Optional[Callable[[int, Exception], None]] = None,
-                          rng: Optional[np.random.Generator] = None,
-                          **kwargs):
-    """Call ``fn(*args, **kwargs)``, retrying transient failures with
-    exponential backoff.  ``jitter`` spreads the sleep by up to that
-    fraction so a fleet of retrying steps does not thundering-herd the
-    same resource on the same schedule.  ``rng`` draws the jitter; pass a
-    generator seeded per worker so retry timing is reproducible per seed
-    (the default is seeded so bare calls stay deterministic too)."""
-    if rng is None:
-        rng = np.random.default_rng(0)
-    delay = backoff_s
-    for attempt in range(retries + 1):
-        try:
-            return fn(*args, **kwargs)
-        except retry_on as e:  # transient: preemption, link flap, ...
-            if attempt == retries:
-                raise
-            if on_retry:
-                on_retry(attempt, e)
-            time.sleep(delay * (1.0 + jitter * float(rng.random())))
-            delay *= 2
-
-
-def best_mesh_shape(n_devices: int, model_parallel: int) -> Tuple[int, int]:
-    """Largest (data, model) grid for the surviving device count, keeping
-    the model axis if divisible, else shrinking it."""
-    mp = model_parallel
-    while mp > 1 and n_devices % mp != 0:
-        mp //= 2
-    return (n_devices // mp, mp)
-
-
-def elastic_remesh(devices: Sequence, model_parallel: int,
-                   axis_names=("data", "model")) -> Mesh:
-    """Rebuild a mesh from the surviving devices (scale-down after failure
-    or scale-up after repair)."""
-    n = len(devices)
-    dp, mp = best_mesh_shape(n, model_parallel)
-    arr = np.array(devices[: dp * mp]).reshape(dp, mp)
-    return Mesh(arr, axis_names)
-
-
-def reshard_state(state, mesh: Mesh, spec_fn: Callable) -> object:
-    """Re-shard a state pytree into ``mesh`` using ``spec_fn(path, leaf) ->
-    PartitionSpec`` — the elastic-rescale restore path."""
-    flat = jax.tree_util.tree_flatten_with_path(state)
-    leaves = []
-    for path, leaf in flat[0]:
-        spec = spec_fn(path, leaf)
-        leaves.append(jax.device_put(
-            np.asarray(leaf), NamedSharding(mesh, spec)))
-    return jax.tree_util.tree_unflatten(flat[1], leaves)
+warnings.warn(
+    "repro.runtime.fault is deprecated; import from repro.runtime.faults "
+    "instead (the modules were consolidated)",
+    DeprecationWarning, stacklevel=2)

@@ -1,0 +1,41 @@
+"""Production serving subsystem: async request queue, continuous
+batching, and budget-aware engine dispatch over the sort registry.
+
+    from repro import serving
+
+    trace = serving.make_trace(64, seed=0)
+    orch = serving.Orchestrator(clock=serving.SimulatedClock())
+    report = orch.run(trace)          # deterministic, cycle-grounded
+
+The pieces (each its own module):
+
+* :mod:`repro.serving.clock` — simulated vs wall time sources;
+* :mod:`repro.serving.request` — :class:`SortRequest` + :class:`SortBudget`;
+* :mod:`repro.serving.queue` — admission control + priorities on the
+  repo's own top-k facade;
+* :mod:`repro.serving.dispatch` — budget-aware engine selection from
+  Table-S5 operating points + live EWMA measurements;
+* :mod:`repro.serving.orchestrator` — the continuous-batching tick loop
+  (snapshot -> rules, cooldowns, single-flight) and the one-shot
+  baseline;
+* :mod:`repro.serving.metrics` — EWMA, percentiles, sustained-throughput
+  stats;
+* :mod:`repro.serving.workload` — deterministic synthetic traces.
+"""
+from repro.serving.clock import SimulatedClock, WallClock
+from repro.serving.dispatch import Dispatch, Dispatcher, Estimate
+from repro.serving.metrics import Ewma, ServeStats, percentile
+from repro.serving.orchestrator import (Orchestrator, OrchestratorConfig,
+                                        Rule, Snapshot, oneshot_loop)
+from repro.serving.queue import AdmitDecision, RequestQueue
+from repro.serving.request import (SortBudget, SortRequest, Status,
+                                   priority_key)
+from repro.serving.workload import make_trace, trace_mix
+
+__all__ = [
+    "SimulatedClock", "WallClock", "Dispatch", "Dispatcher", "Estimate",
+    "Ewma", "ServeStats", "percentile", "Orchestrator",
+    "OrchestratorConfig", "Rule", "Snapshot", "oneshot_loop",
+    "AdmitDecision", "RequestQueue", "SortBudget", "SortRequest",
+    "Status", "priority_key", "make_trace", "trace_mix",
+]

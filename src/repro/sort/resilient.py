@@ -8,7 +8,7 @@ registers:
   digit-plane monotonicity check, and on failure escalates through repair
   strategies: dead-bank re-programming (heartbeat-detected), re-read
   majority voting, Hamming parity-plane ECC, then full retries with
-  exponential backoff (:func:`repro.runtime.fault.run_step_with_retries`).
+  exponential backoff (:func:`repro.runtime.faults.run_step_with_retries`).
   If everything fails it degrades gracefully: the best permutation seen is
   returned with ``degraded=True`` and its ``quality`` score instead of an
   exception.
@@ -36,7 +36,7 @@ from repro.core import bitplane as bp
 from repro.core import catns
 from repro.core import tns as jt
 from repro.runtime import faults
-from repro.runtime.fault import elastic_remesh, run_step_with_retries
+from repro.runtime.faults import elastic_remesh, run_step_with_retries
 from repro.sort.registry import _REGISTRY, EngineSpec, register
 from repro.sort.result import SortResult
 
@@ -272,7 +272,7 @@ def _make_resilient_fn(inner: EngineSpec):
 
 
 # ---------------------------------------------------------------------------
-# Fault-tolerant multi-bank execution (§2.3.1 + runtime/fault.py wiring).
+# Fault-tolerant multi-bank execution (§2.3.1 + runtime faults.py wiring).
 # ---------------------------------------------------------------------------
 
 

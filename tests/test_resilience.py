@@ -12,7 +12,6 @@ import pytest
 from repro import sort as sort_engine
 from repro.core import bitplane as bp
 from repro.core import device_model as dm
-from repro.runtime import fault as rtfault
 from repro.runtime import faults
 from repro.sort import resilient
 
@@ -373,7 +372,7 @@ print("OK")
 
 
 # ---------------------------------------------------------------------------
-# runtime/fault.py satellites.
+# runtime-FT satellites (merged into runtime/faults.py).
 # ---------------------------------------------------------------------------
 
 
@@ -387,20 +386,32 @@ class TestRuntimeFault:
                 raise RuntimeError("transient")
             return a + b
 
-        assert rtfault.run_step_with_retries(
+        assert faults.run_step_with_retries(
             step, 1, b=2, retries=3, backoff_s=0.001) == 3
         assert calls == [(1, 2)] * 3
 
     def test_retries_exhaust(self):
         with pytest.raises(RuntimeError):
-            rtfault.run_step_with_retries(
+            faults.run_step_with_retries(
                 lambda: (_ for _ in ()).throw(RuntimeError("x")),
                 retries=1, backoff_s=0.001)
 
     def test_heartbeat_stop_joins(self):
-        hb = rtfault.Heartbeat(interval_s=0.01, timeout_s=0.05)
+        hb = faults.Heartbeat(interval_s=0.01, timeout_s=0.05)
         hb.start_self_beat("h")
         time.sleep(0.03)
         hb.stop(join_timeout_s=1.0)
         assert hb._thread is None
         assert hb.suspects() == []  # fresh beat, then cleanly stopped
+
+    def test_fault_module_shim(self):
+        # the old module path stays importable but warns and aliases the
+        # canonical objects
+        import importlib
+
+        import repro.runtime.fault as shim
+        with pytest.warns(DeprecationWarning):
+            importlib.reload(shim)
+        assert shim.Heartbeat is faults.Heartbeat
+        assert shim.elastic_remesh is faults.elastic_remesh
+        assert shim.run_step_with_retries is faults.run_step_with_retries

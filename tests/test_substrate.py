@@ -18,7 +18,7 @@ from repro.data import pipeline as dp
 from repro.models import transformer as T
 from repro.models.config import ShapeConfig
 from repro.optim import adamw
-from repro.runtime import fault
+from repro.runtime import faults
 
 
 class TestData:
@@ -151,7 +151,7 @@ class TestCheckpoint:
 
 class TestFaultRuntime:
     def test_straggler_detection(self):
-        mon = fault.StragglerMonitor(threshold=2.0)
+        mon = faults.StragglerMonitor(threshold=2.0)
         for _ in range(10):
             assert not mon.observe(1.0)
         assert mon.observe(5.0)
@@ -159,7 +159,7 @@ class TestFaultRuntime:
         assert mon.ema == pytest.approx(1.0, rel=0.01)
 
     def test_heartbeat_suspects(self):
-        hb = fault.Heartbeat(interval_s=0.01, timeout_s=0.05)
+        hb = faults.Heartbeat(interval_s=0.01, timeout_s=0.05)
         hb.beat("hostA")
         hb.beat("hostB")
         assert hb.suspects() == []
@@ -176,31 +176,31 @@ class TestFaultRuntime:
                 raise RuntimeError("preempted")
             return "ok"
 
-        out = fault.run_step_with_retries(flaky, retries=5, backoff_s=0.01)
+        out = faults.run_step_with_retries(flaky, retries=5, backoff_s=0.01)
         assert out == "ok" and len(calls) == 3
 
     def test_best_mesh_shape(self):
-        assert fault.best_mesh_shape(512, 16) == (32, 16)
-        assert fault.best_mesh_shape(488, 16) == (61, 8)
-        assert fault.best_mesh_shape(7, 16) == (7, 1)
+        assert faults.best_mesh_shape(512, 16) == (32, 16)
+        assert faults.best_mesh_shape(488, 16) == (61, 8)
+        assert faults.best_mesh_shape(7, 16) == (7, 1)
 
     def test_elastic_remesh_subprocess(self):
         code = r"""
 import sys; sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.runtime import fault
+from repro.runtime import faults
 devs = jax.devices()
-mesh = fault.elastic_remesh(devs, model_parallel=4)
+mesh = faults.elastic_remesh(devs, model_parallel=4)
 assert dict(zip(mesh.axis_names, mesh.devices.shape)) == {"data": 2, "model": 4}
 state = {"w": np.arange(64.0).reshape(8, 8)}
-sharded = fault.reshard_state(state, mesh, lambda p, l: P("data", "model"))
+sharded = faults.reshard_state(state, mesh, lambda p, l: P("data", "model"))
 # lose 3 devices -> 5 survivors -> (5, 1) mesh
-mesh2 = fault.elastic_remesh(devs[:5], model_parallel=4)
+mesh2 = faults.elastic_remesh(devs[:5], model_parallel=4)
 assert dict(zip(mesh2.axis_names, mesh2.devices.shape)) == {"data": 5, "model": 1}
 # hmm: 8x8 array needs divisible sharding; use (5,1)-compatible array
 state2 = {"w": np.arange(40.0).reshape(5, 8)}
-res = fault.reshard_state(state2, mesh2, lambda p, l: P("data", None))
+res = faults.reshard_state(state2, mesh2, lambda p, l: P("data", None))
 np.testing.assert_array_equal(np.asarray(res["w"]), state2["w"])
 print("OK")
 """

@@ -18,3 +18,6 @@ python -m benchmarks.run --smoke
 
 echo "== fault-injection smoke =="
 python -m benchmarks.run --smoke-faults
+
+echo "== serving-loop smoke =="
+python -m benchmarks.run --smoke-serve
