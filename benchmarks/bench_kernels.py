@@ -80,6 +80,19 @@ def run(report):
            {"speedup_vs_loop": round(us_loop / us_batched, 2)})
     report("kernel_tns_python_loop_b64", us_loop, {})
 
+    # fused Pallas TNS vs the while_loop machine vs XLA top_k: one small
+    # and one serving-shaped cell (the full N x m grid + roofline lives
+    # in benchmarks.bench_pallas_tns / BENCH_pallas_tns.json)
+    from benchmarks import bench_pallas_tns
+    for cell in (dict(fmt="unsigned", width=16, n=256, m=8, b=64, k=2),
+                 dict(fmt="unsigned", width=16, n=1024, m=2, b=64, k=0)):
+        r = bench_pallas_tns.measure_cell(cell, reps=3)
+        report(f"kernel_fused_tns_n{r['n']}_m{r['m']}", r["fused_us"],
+               {"machine_us": r["machine_us"],
+                "lax_topk_us": r["lax_topk_us"],
+                "speedup_vs_machine": r["speedup_vs_machine"],
+                "parity_ok": r["parity_ok"]})
+
     # Pallas kernels (backend-aware: interpret on CPU, compiled on TPU)
     from repro.kernels import backend, ops
     xk = jnp.asarray(rng.standard_normal((8, 160)), jnp.float32)

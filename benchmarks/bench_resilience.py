@@ -16,6 +16,7 @@ import numpy as np
 from benchmarks.datasets import make_dataset
 from repro import sort as sort_engine
 from repro.core import device_model as dm
+from repro.kernels import backend
 from repro.runtime import faults
 
 BERS = (0.0, 0.001, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2)
@@ -99,6 +100,7 @@ def build_report(smoke: bool = False) -> dict:
     seeds = (0,) if smoke else (0, 1, 2)
     return {
         "bench": "resilience",
+        "env": backend.env_stamp(),
         "sweep": sweep(bers=bers, seeds=seeds),
         "dead_bank": dead_bank_point(),
         "operating_point": operating_point(),

@@ -15,6 +15,7 @@ import argparse
 import json
 
 from repro import serving
+from repro.kernels import backend
 from repro.runtime import faults
 
 # (n_requests, n, chunk, mean_gap_us): the gap is far below the mean
@@ -64,6 +65,7 @@ def build_report(smoke: bool = False) -> dict:
                                mean_gap_us=cfg["mean_gap_us"])
     return {
         "bench": "serve",
+        "env": backend.env_stamp(),
         "config": dict(cfg),
         "trace_mix": serving.trace_mix(trace),
         "continuous": cont,

@@ -161,18 +161,48 @@ def smoke_serve() -> int:
     return 0
 
 
+def smoke_pallas() -> int:
+    """Fused-kernel CI lane: interpret-mode permutation + cycle parity of
+    the fused Pallas TNS kernel against the while_loop machine, the
+    autotune round-trip, and a ratio-based perf gate — measured
+    fused/machine speedup must stay within 0.9x of the committed
+    ``BENCH_pallas_tns.json`` baseline (skipped when the committed
+    artifact was produced under a different backend/pallas mode)."""
+    from benchmarks import bench_pallas_tns
+
+    rep = bench_pallas_tns.build_report(smoke=True)
+    for r in rep["head_to_head"]:
+        _report(f"pallas_{r['fmt']}_n{r['n']}_m{r['m']}_b{r['b']}",
+                r["fused_us"],
+                {"machine_us": r["machine_us"],
+                 "speedup_vs_machine": r["speedup_vs_machine"],
+                 "parity_ok": r["parity_ok"],
+                 "cycles_match": r["cycles_match"]})
+    acc = rep["acceptance"]
+    _report("pallas_acceptance", 0.0, acc)
+    failures = bench_pallas_tns.check(
+        rep, bench_pallas_tns.committed_artifact())
+    if failures:
+        print(f"# PALLAS SMOKE FAILED: {failures}", flush=True)
+        return 1
+    print("# PALLAS SMOKE OK", flush=True)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section filter "
-                         "(sort,apps,sweeps,kernels,roofline,resilience,"
-                         "serve)")
+                         "(sort,apps,sweeps,kernels,pallas,roofline,"
+                         "resilience,serve)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast engine-registry pass for CI")
     ap.add_argument("--smoke-faults", action="store_true",
                     help="fault-injection + repair pass for CI")
     ap.add_argument("--smoke-serve", action="store_true",
                     help="continuous-batching serving pass for CI")
+    ap.add_argument("--smoke-pallas", action="store_true",
+                    help="fused Pallas TNS parity + perf-gate pass for CI")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
@@ -182,15 +212,18 @@ def main() -> None:
         sys.exit(smoke_faults())
     if args.smoke_serve:
         sys.exit(smoke_serve())
+    if args.smoke_pallas:
+        sys.exit(smoke_pallas())
 
-    from benchmarks import (bench_apps, bench_kernels, bench_resilience,
-                            bench_roofline, bench_serve, bench_sort,
-                            bench_sweeps)
+    from benchmarks import (bench_apps, bench_kernels, bench_pallas_tns,
+                            bench_resilience, bench_roofline, bench_serve,
+                            bench_sort, bench_sweeps)
     sections = {
         "sort": bench_sort.run,          # Fig 4f-g, S18/S19, Table S5
         "apps": bench_apps.run,          # Fig 5, Fig 6, Fig S28
         "sweeps": bench_sweeps.run,      # S11, S12, Fig 2e-g
         "kernels": bench_kernels.run,    # kernel micro-benchmarks
+        "pallas": bench_pallas_tns.run,  # fused TNS vs machine vs XLA
         "roofline": bench_roofline.run,  # §Roofline table from dry-run
         "resilience": bench_resilience.run,  # Fig. S28 + §2.3.1 faults
         "serve": bench_serve.run,        # continuous batching vs one-shot

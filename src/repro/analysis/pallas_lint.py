@@ -16,10 +16,18 @@ sites and the kernel bodies they trace.
 * PAL205 — a module defining ``pallas_call`` sites must import
   :mod:`repro.kernels.backend` (the interpret-mode fallback), so kernels
   stay runnable on the CPU-only container.
+* PAL206 — VMEM budget: when the per-program block footprint of a
+  ``pallas_call`` is statically estimable (literal ``BlockSpec`` shapes;
+  output dtypes from the paired ``ShapeDtypeStruct``, inputs assumed
+  4 B/elem), it must fit the per-core VMEM budget — 16 MiB by default
+  (the TPU guide's figure), overridable via ``REPRO_VMEM_BUDGET`` bytes.
+  Non-literal dims make a spec unestimable and exempt (runtime-shaped
+  kernels size their own blocks; this catches hardcoded oversize tiles).
 """
 from __future__ import annotations
 
 import ast
+import os
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.analysis.core import Finding, ModuleInfo, const_int, keyword_map
@@ -27,6 +35,17 @@ from repro.analysis.core import Finding, ModuleInfo, const_int, keyword_map
 PALLAS_CALL = "jax.experimental.pallas.pallas_call"
 BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
 BACKEND_MODULE = "repro.kernels.backend"
+
+#: PAL206 default: ~16 MiB of VMEM per TPU core (see the Pallas guide);
+#: REPRO_VMEM_BUDGET (bytes) overrides for parts with different SRAM.
+DEFAULT_VMEM_BUDGET = 16 * 2**20
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
 
 # jnp/np ops that have no business inside a Pallas kernel body: data-
 # dependent output shapes or host-side semantics
@@ -75,6 +94,79 @@ def _sds_shape(node: ast.AST, mod: ModuleInfo
     return None
 
 
+def vmem_budget() -> int:
+    """The PAL206 budget in bytes (env override, default 16 MiB)."""
+    try:
+        return int(os.environ["REPRO_VMEM_BUDGET"])
+    except (KeyError, ValueError):
+        return DEFAULT_VMEM_BUDGET
+
+
+def _dtype_bytes(node: ast.AST, mod: ModuleInfo) -> Optional[int]:
+    qual = mod.qualname(node)
+    if qual is None:
+        return None
+    return _DTYPE_BYTES.get(qual.rsplit(".", 1)[-1])
+
+
+def _block_bytes(spec: ast.Call, sds: Optional[ast.AST], mod: ModuleInfo,
+                 default_itemsize: Optional[int] = None) -> Optional[int]:
+    """Statically-estimated bytes one grid program holds for this spec:
+    literal block dims (falling back to the paired ShapeDtypeStruct dim
+    for pass-through ``None`` entries) x element size.  None when any
+    dim is non-literal — runtime-shaped blocks are exempt."""
+    block = _block_shape(spec)
+    dims = _sds_shape(sds, mod) if sds is not None else None
+    if block is None:
+        block = dims
+    if block is None:
+        return None
+    total = 1
+    for i, bdim in enumerate(block):
+        if bdim is None and dims is not None and i < len(dims):
+            bdim = dims[i]
+        if bdim is None or bdim <= 0:
+            return None
+        total *= bdim
+    itemsize = None
+    if isinstance(sds, ast.Call) and len(sds.args) > 1:
+        itemsize = _dtype_bytes(sds.args[1], mod)
+    if itemsize is None:
+        itemsize = default_itemsize
+    if itemsize is None:
+        return None
+    return total * itemsize
+
+
+def _check_vmem(mod: ModuleInfo, call: ast.Call, kw: Dict[str, ast.AST],
+                findings: List[Finding]) -> None:
+    """PAL206: summed literal block footprint vs the VMEM budget."""
+    est, estimable = 0, False
+    out_specs = [s for s in
+                 (_as_list(kw["out_specs"]) if "out_specs" in kw else [])
+                 if isinstance(s, ast.Call)
+                 and mod.qualname(s.func) == BLOCK_SPEC]
+    out_shapes = _as_list(kw["out_shape"]) if "out_shape" in kw else []
+    for spec, sds in zip(out_specs, out_shapes):
+        b = _block_bytes(spec, sds, mod)
+        if b is not None:
+            est, estimable = est + b, True
+    for item in (_as_list(kw["in_specs"]) if "in_specs" in kw else []):
+        if isinstance(item, ast.Call) \
+                and mod.qualname(item.func) == BLOCK_SPEC:
+            # input dtypes are not visible at the site; assume 4 B/elem
+            b = _block_bytes(item, None, mod, default_itemsize=4)
+            if b is not None:
+                est, estimable = est + b, True
+    budget = vmem_budget()
+    if estimable and est > budget:
+        findings.append(Finding(
+            "PAL206", str(mod.path), call.lineno, call.col_offset,
+            f"estimated per-program block footprint {est} B exceeds the "
+            f"{budget} B VMEM budget; shrink the block shapes or raise "
+            "REPRO_VMEM_BUDGET if the target part has more SRAM"))
+
+
 def _check_site(mod: ModuleInfo, call: ast.Call,
                 findings: List[Finding]) -> None:
     kw = keyword_map(call)
@@ -111,6 +203,8 @@ def _check_site(mod: ModuleInfo, call: ast.Call,
                     "PAL202", str(mod.path), spec.lineno, spec.col_offset,
                     f"BlockSpec index_map takes {arity} arg(s) but the "
                     f"grid has {grid_len} dimension(s)"))
+
+    _check_vmem(mod, call, kw, findings)
 
     # PAL201: literal block shape must divide literal out_shape dims
     if "out_specs" in kw and "out_shape" in kw:

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.core import bitplane as bp
 from repro.core import radix_select as rs
 from repro.core import tns as jt
-from repro.kernels import bitplane_pack, digit_read, masked_matmul, radix_topk
+from repro.kernels import (bitplane_pack, digit_read, fused_tns,
+                           masked_matmul, radix_topk)
 from repro.sort import registry
 
 #: per-format word width used across the test suite
@@ -123,6 +124,18 @@ def _trace_radix(fmt: str, n: int, b: Optional[int]) -> Optional[str]:
     return _expect(perm, shape, jnp.int32, "perm")
 
 
+def _trace_pallas_tns(fmt: str, n: int, k: int, b: int) -> Optional[str]:
+    width = WIDTHS[fmt]
+    sign = _sds((b, n), jnp.bool_) if fmt in _SIGNED else None
+    out = jax.eval_shape(
+        functools.partial(fused_tns.fused_tns_planes, k=k, fmt=fmt,
+                          interpret=True),
+        _sds((b, width, n), jnp.uint8), sign)
+    return _expect(out.perm, (b, n), jnp.int32, "perm") \
+        or _expect(out.cycles, (b,), jnp.int32, "cycles") \
+        or _expect(out.useful_drs, (b,), jnp.int32, "useful_drs")
+
+
 def _trace_pallas_topk(n: int, k: int, b: int) -> Optional[str]:
     kk = max(k, 1)
     keys, idx = jax.eval_shape(
@@ -193,6 +206,7 @@ ENGINE_CORES: Dict[str, str] = {
     "ml": "ml",
     "radix": "radix",
     "pallas-topk": "pallas-topk",
+    "pallas-tns": "pallas-tns",
     "tns-oracle": "host", "bts": "host", "bitslice": "host",
 }
 
@@ -265,6 +279,12 @@ def run_gate(ns: Sequence[int] = (8, 24), ks: Sequence[int] = (0, 2),
                                 "kernel:radix_topk", f"N={n} k={k} B={b}",
                                 functools.partial(_trace_pallas_topk,
                                                   n, k, b)))
+                    elif core == "pallas-tns":
+                        for b in batches:
+                            results.append(_run(
+                                "kernel:fused_tns", f"{case} B={b}",
+                                functools.partial(_trace_pallas_tns,
+                                                  fmt, n, k, b)))
 
     for n in ns:
         for b in batches:

@@ -67,6 +67,23 @@ def use_ref(interpret: Optional[bool] = None) -> bool:
     return interpret is None and mode() == "jnp"
 
 
+def env_stamp() -> dict:
+    """Provenance stamp for benchmark artifacts: which backend, JAX
+    version and Pallas dispatch mode produced the numbers.  Every BENCH_*
+    writer embeds this so a committed artifact can be told apart from a
+    rerun on different hardware (a compiled-TPU baseline must not gate an
+    interpret-CPU run, and vice versa)."""
+    try:
+        backend = jax.default_backend()
+    except RuntimeError:
+        backend = "none"
+    return {
+        "backend": backend,
+        "jax_version": jax.__version__,
+        "pallas_mode": mode(),
+    }
+
+
 def reset() -> None:
     """Forget the cached mode (tests poke REPRO_PALLAS).
 

@@ -24,6 +24,22 @@ from jax.experimental import pallas as pl
 from repro.kernels import backend
 
 
+def pad_lanes(n: int) -> int:
+    """Smallest multiple of the 128-wide TPU lane tile that covers ``n``."""
+    return max(128, -(-n // 128) * 128)
+
+
+def pad_to(x: jnp.ndarray, shape, fill) -> jnp.ndarray:
+    """Pad the trailing edge of every axis of ``x`` up to ``shape`` with a
+    constant ``fill`` — ONE ``jnp.pad`` call, so one buffer materializes
+    (vs the zero-alloc + two ``.at[].set`` copies it replaces).  Shared by
+    every Pallas kernel entry point that lane-pads its operands."""
+    cfg = tuple((0, t - s) for s, t in zip(x.shape, shape))
+    if not any(hi for _, hi in cfg):
+        return x
+    return jnp.pad(x, cfg, constant_values=fill)
+
+
 def _dr_kernel(planes_ref, mask_ref, drs_ref, *, width: int, n_valid: int,
                ascending: bool):
     planes = planes_ref[0]                                  # (W, N) uint8
@@ -55,12 +71,11 @@ def min_search(planes: jnp.ndarray, ascending: bool = True,
     interpret = backend.use_interpret(interpret)
     assert planes.ndim == 3 and planes.dtype == jnp.uint8
     b, w, n = planes.shape
-    n_pad = max(128, -(-n // 128) * 128)
-    planes_p = jnp.zeros((b, w, n_pad), dtype=jnp.uint8)
-    if ascending:
-        # pad with 1s so padding never wins a min search
-        planes_p = planes_p.at[:, :, n:].set(1)
-    planes_p = planes_p.at[:, :, :n].set(planes)
+    n_pad = pad_lanes(n)
+    # ascending pads with 1s so padding never wins a min search (the
+    # kernel's `valid` lane mask already excludes it; the fill just keeps
+    # the all-0's/1's checks honest on the padded tail)
+    planes_p = pad_to(planes, (b, w, n_pad), 1 if ascending else 0)
     mask, drs = pl.pallas_call(
         functools.partial(_dr_kernel, width=w, n_valid=n, ascending=ascending),
         grid=(b,),

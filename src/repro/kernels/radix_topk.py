@@ -25,6 +25,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
+from repro.kernels.digit_read import pad_lanes, pad_to
 
 KEY_BITS = 32
 # NOTE: numpy, not jnp — this module may be lazily imported inside a jit
@@ -59,10 +60,6 @@ def _topk_kernel(keys_ref, idx_ref, key_ref, *, k: int, r: int, n_valid: int):
         valid = valid & (lane != chosen[:, None])
 
 
-def _pad_lanes(n: int) -> int:
-    return max(128, -(-n // 128) * 128)
-
-
 @functools.partial(jax.jit, static_argnames=("k", "r", "block_rows",
                                              "interpret"))
 def topk_keys(keys: jnp.ndarray, k: int, r: int = 4, block_rows: int = 8,
@@ -73,11 +70,10 @@ def topk_keys(keys: jnp.ndarray, k: int, r: int = 4, block_rows: int = 8,
     interpret = backend.use_interpret(interpret)
     assert keys.dtype == jnp.uint32 and keys.ndim == 2
     b, n = keys.shape
-    n_pad = _pad_lanes(n)
+    n_pad = pad_lanes(n)
     bm = min(block_rows, b)
     b_pad = -(-b // bm) * bm
-    keys_p = jnp.full((b_pad, n_pad), SENTINEL, dtype=jnp.uint32)
-    keys_p = keys_p.at[:b, :n].set(keys)
+    keys_p = pad_to(keys, (b_pad, n_pad), SENTINEL)
     grid = (b_pad // bm,)
     out = pl.pallas_call(
         functools.partial(_topk_kernel, k=k, r=r, n_valid=n),

@@ -207,3 +207,49 @@ def _topk_keys_dispatch(keys: jnp.ndarray, m: int):
     if backend.use_ref(None):
         return ref.topk_keys_ref(keys, m)
     return radix_topk.topk_keys(keys, m)
+
+
+@register("pallas-tns", mode="throughput", strategy="tns",
+          supports_stop_after=True, supports_batch=True,
+          description="Fused Pallas TNS pipeline: digit read + tree-node "
+                      "skipping + winner write-back in one kernel; "
+                      "cycle/DR parity with the while_loop machine "
+                      "(interpret on CPU, compiled on TPU)")
+def _pallas_tns(x, *, width, fmt, k, ascending, level_bits, stop_after,
+                block_rows=None, unroll=None, **kw):
+    if level_bits != 1:
+        raise NotImplementedError(
+            "pallas-tns runs binary (level_bits=1) planes; multi-level "
+            "stays on the 'ml' while_loop machine")
+    from repro.kernels import autotune, fused_tns
+    xb = np.asarray(x)
+    squeeze = xb.ndim == 1
+    if squeeze:
+        xb = xb[None]
+    b, n = xb.shape
+    if n >= (1 << 15):
+        raise NotImplementedError(
+            "pallas-tns supports N < 32768 per bank (same packed-count "
+            "bound as the batched machine its oracle path reuses)")
+    if width > 30:
+        raise NotImplementedError(
+            "pallas-tns packs a lane's digit column into one int32 key; "
+            "width <= 30 required (32-bit data stays on the while_loop "
+            "machines)")
+    m = n if stop_after is None else min(stop_after, n)
+    if block_rows is None and unroll is None:
+        # the committed autotune table picks the grid shape per cell
+        params = autotune.best_params(fmt, n, m, b)
+        block_rows = params["block_rows"] or None
+        unroll = params["unroll"]
+    out = fused_tns.fused_tns_sort(
+        xb, width=width, k=k, fmt=fmt, ascending=ascending,
+        stop_after=stop_after, block_rows=block_rows, unroll=unroll or 1)
+    perm, cycles, drs, rlc = (np.asarray(out.perm), np.asarray(out.cycles),
+                              np.asarray(out.drs),
+                              np.asarray(out.reload_cycles))
+    if squeeze:
+        perm, cycles, drs, rlc = perm[0], cycles[0], drs[0], rlc[0]
+    return _finish(x, perm, engine="pallas-tns", fmt=fmt, width=width,
+                   k=k, stop_after=stop_after, cycles=cycles, drs=drs,
+                   reload_cycles=rlc, strategy="tns")

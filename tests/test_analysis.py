@@ -244,6 +244,81 @@ class TestPallasLint:
         """)
         assert "PAL205" in _rules(findings)
 
+    _VMEM_BIG = """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from repro.kernels import backend
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                kern,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((4096, 4096), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((4096, 4096), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((4096, 4096), jnp.float32),
+                interpret=True,
+            )(x)
+    """
+
+    def test_vmem_budget_exceeded(self, tmp_path):
+        # 4096x4096 f32 out block + 4096x4096 @4B in block = 128 MiB
+        findings = _lint(tmp_path, self._VMEM_BIG)
+        assert "PAL206" in _rules(findings)
+
+    def test_vmem_budget_env_override(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", str(256 * 2**20))
+        findings = _lint(tmp_path, self._VMEM_BIG)
+        assert "PAL206" not in _rules(findings)
+
+    def test_vmem_runtime_shapes_exempt(self, tmp_path):
+        # non-literal block dims cannot be estimated -> no finding
+        findings = _lint(tmp_path, """
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x, bm, n):
+                return pl.pallas_call(
+                    kern,
+                    grid=(1,),
+                    in_specs=[pl.BlockSpec((bm, n), lambda i: (0, 0))],
+                    out_specs=pl.BlockSpec((bm, n), lambda i: (0, 0)),
+                    out_shape=jax.ShapeDtypeStruct((8, 128), jnp.int32),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL206" not in _rules(findings)
+
+    def test_vmem_small_block_clean(self, tmp_path):
+        findings = _lint(tmp_path, """
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+            from repro.kernels import backend
+
+            def kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def run(x):
+                return pl.pallas_call(
+                    kern,
+                    grid=(1,),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+                    out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+                    out_shape=jax.ShapeDtypeStruct((8, 128), jnp.int32),
+                    interpret=True,
+                )(x)
+        """)
+        assert "PAL206" not in _rules(findings)
+
 
 # ---------------------------------------------------------------------------
 # DET3xx: determinism lint

@@ -25,6 +25,7 @@ import time
 import numpy as np
 
 from repro.core import tns as jt
+from repro.kernels import backend
 
 
 def measure(B=64, N=256, W=16, k=2, reps=9, seed=0):
@@ -64,6 +65,7 @@ def measure(B=64, N=256, W=16, k=2, reps=9, seed=0):
         "permutations_identical": True,
         "host": {"machine": platform.machine(),
                  "python": platform.python_version()},
+        "env": backend.env_stamp(),
     }
 
 

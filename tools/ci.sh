@@ -21,3 +21,6 @@ python -m benchmarks.run --smoke-faults
 
 echo "== serving-loop smoke =="
 python -m benchmarks.run --smoke-serve
+
+echo "== fused Pallas TNS smoke (parity + perf gate) =="
+python -m benchmarks.run --smoke-pallas
